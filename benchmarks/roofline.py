@@ -1,0 +1,77 @@
+"""Roofline table generator — reads results/dryrun/*.json (launch.dryrun
+output) and emits the EXPERIMENTS.md §Roofline markdown table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(results_dir="results/dryrun", mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        rows.append(d)
+    return rows
+
+
+ARCH_ORDER = ["gemma-2b", "llama3.2-3b", "nemotron-4-340b", "granite-8b",
+              "whisper-large-v3", "internvl2-1b", "falcon-mamba-7b",
+              "mixtral-8x22b", "deepseek-v3-671b", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(d):
+    return (ARCH_ORDER.index(d["arch"]), SHAPE_ORDER.index(d["shape"]))
+
+
+def table(rows, analytic=True):
+    rows = sorted(rows, key=_key)
+    p = "an_" if analytic else ""
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck "
+           "| MODEL_FLOPS/HLO ratio | MFU bound | fits 16G |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for d in rows:
+        if d.get("skipped"):
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | "
+                       f"SKIP (full attention) | — | — | — |")
+            continue
+        ratio = d.get("an_useful_ratio" if analytic else "useful_flops_ratio")
+        mfu = d.get("an_mfu")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d[p+'compute_s']:.4g} | "
+            f"{d[p+'memory_s']:.4g} | {d[p+'collective_s']:.4g} | "
+            f"{d[p+'bottleneck']} | "
+            f"{ratio:.2f} | " + (f"{mfu:.1%} | " if mfu else "— | ") +
+            f"{'Y' if d.get('fits_hbm') else 'N'} |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    rows = [r for r in rows if not r.get("skipped")]
+    worst = sorted(rows, key=lambda d: d.get("an_mfu") or 0)[:5]
+    coll = sorted(rows, key=lambda d: -(d.get("an_collective_s") or 0)
+                  / max(1e-12, d.get("an_step_s") or 1))[:5]
+    lines = ["worst MFU-bound cells:"]
+    for d in worst:
+        lines.append(f"  {d['arch']}/{d['shape']}: mfu={d.get('an_mfu'):.2%} "
+                     f"bottleneck={d['an_bottleneck']}")
+    lines.append("most collective-bound cells:")
+    for d in coll:
+        lines.append(f"  {d['arch']}/{d['shape']}: "
+                     f"coll={d.get('an_collective_s'):.4g}s of "
+                     f"step={d.get('an_step_s'):.4g}s")
+    nofit = [d for d in rows if not d.get("fits_hbm")]
+    lines.append(f"cells exceeding 16G HBM (XLA temp estimate): "
+                 f"{[(d['arch'], d['shape']) for d in nofit]}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = load(mesh=mesh)
+    print(table(rows))
+    print()
+    print(summary(rows))

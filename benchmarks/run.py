@@ -1,0 +1,161 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Outputs ``name,us_per_call,derived`` CSV rows per benchmark plus the
+paper-comparison tables:
+  * table3_fps      — ILP throughput model vs paper Table 3 (4 platform x
+                      model cells: FPS, Gops/s, DSPs)
+  * table4_buffers  — skip-connection buffering, eq. 21/22/23 (R_sc = 0.5)
+  * fig13_addfold   — fused residual kernel vs unfused oracle: bit-exactness
+                      + HBM traffic model ratio
+  * kernels_micro   — per-kernel wall time (interpret mode on CPU; TPU is
+                      the target, numbers are correctness-path timings)
+  * roofline        — reads results/dryrun/*.json (launch.dryrun) and prints
+                      the three-term table per (arch x shape)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import dataflow, graph, ilp  # noqa: E402
+
+
+def _time(fn, *args, n=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def table3_fps():
+    print("\n## table3_fps — ILP throughput model vs paper Table 3")
+    print("name,us_per_call,derived")
+    paper = {("ultra96", "resnet8"): (12971, 317),
+             ("ultra96", "resnet20"): (3254, 264),
+             ("kv260", "resnet8"): (30153, 773),
+             ("kv260", "resnet20"): (7601, 616)}
+    for plat in ("ultra96", "kv260"):
+        for name, layers in (("resnet8", dataflow.resnet8_layers()),
+                             ("resnet20", dataflow.resnet20_layers())):
+            t0 = time.perf_counter()
+            sol = ilp.predict_fps(layers, plat)
+            us = (time.perf_counter() - t0) * 1e6
+            pf, pg = paper[(plat, name)]
+            print(f"table3/{plat}/{name},{us:.0f},"
+                  f"fps={sol.fps:.0f};paper_fps={pf};"
+                  f"err={sol.fps/pf-1:+.1%};gops={sol.gops:.0f};"
+                  f"dsp={sol.dsp_used}")
+
+
+def table4_buffers():
+    print("\n## table4_buffers — skip buffering (eq. 21/22/23)")
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    g0 = graph.resnet20_graph()
+    g1 = graph.optimize(graph.resnet20_graph())
+    rep = graph.skip_buffer_report(g0, g1)
+    us = (time.perf_counter() - t0) * 1e6
+    mean_ratio = float(np.mean([r["ratio"] for r in rep]))
+    print(f"table4/resnet20,{us:.0f},blocks={len(rep)};"
+          f"mean_R_sc={mean_ratio:.3f};paper_R_sc=0.5")
+    adds = sum(1 for n in g1.nodes if n.op == "add")
+    print(f"table4/addfold,{us:.0f},residual_adds_after_opt={adds}")
+
+
+def fig13_addfold():
+    print("\n## fig13_addfold — fused residual block kernel")
+    print("name,us_per_call,derived")
+    from repro.kernels.resblock_fused.ops import resblock_fused_op
+    from repro.kernels.resblock_fused.ref import resblock_ref
+    key = jax.random.PRNGKey(0)
+    N, H, C = 2, 16, 16
+    x = jax.random.randint(key, (N, H, H, C), 0, 256, jnp.int32).astype(jnp.uint8)
+    w0 = jax.random.randint(jax.random.fold_in(key, 1), (3, 3, C, C), -128,
+                            128, jnp.int32).astype(jnp.int8)
+    w1 = jax.random.randint(jax.random.fold_in(key, 2), (3, 3, C, C), -128,
+                            128, jnp.int32).astype(jnp.int8)
+    b = jnp.zeros((C,), jnp.int32)
+    us = _time(lambda: resblock_fused_op(x, w0, b, w1, b, shift0=8, shift1=8,
+                                         skip_shift=3))
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    ref = resblock_ref(xp, w0, b, w1, b, shift0=8, shift1=8, skip_shift=3)
+    got = resblock_fused_op(x, w0, b, w1, b, shift0=8, shift1=8, skip_shift=3)
+    exact = bool((np.asarray(got) == np.asarray(ref)).all())
+    hbm_f = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=True)
+    hbm_u = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=False)
+    print(f"fig13/resblock_fused,{us:.0f},bit_exact={exact};"
+          f"hbm_traffic_ratio={hbm_u/hbm_f:.2f}x_saved")
+
+
+def kernels_micro():
+    print("\n## kernels_micro — interpret-mode timings (TPU is the target)")
+    print("name,us_per_call,derived")
+    from repro.kernels.matmul_int8.ops import matmul_int8_op
+    key = jax.random.PRNGKey(0)
+    a = jax.random.randint(key, (128, 128), -128, 128, jnp.int32).astype(jnp.int8)
+    b = jax.random.randint(key, (128, 128), -128, 128, jnp.int32).astype(jnp.int8)
+    us = _time(matmul_int8_op, a, b)
+    print(f"kernel/matmul_int8_128,{us:.0f},int8->int32_MXU_tiles")
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    q = jax.random.normal(key, (1, 128, 4, 32))
+    us = _time(lambda: flash_attention_op(q, q[:, :, :4], q[:, :, :4],
+                                          bq=64, bk=64))
+    print(f"kernel/flash_attention_128,{us:.0f},online_softmax")
+    from repro.kernels.selective_scan.ops import selective_scan_op
+    u = jax.random.normal(key, (2, 64, 32))
+    dt = jax.nn.softplus(u)
+    A = -jnp.ones((32, 8))
+    Bc = jax.random.normal(key, (2, 64, 8))
+    h0 = jnp.zeros((2, 32, 8))
+    us = _time(lambda: selective_scan_op(u, dt, A, Bc, Bc, h0, bd=16))
+    print(f"kernel/selective_scan_64,{us:.0f},mamba1_recurrence")
+    from repro.kernels.conv2d_int8.ops import conv2d_int8_op
+    x = jax.random.randint(key, (2, 16, 16, 16), -128, 128, jnp.int32).astype(jnp.int8)
+    w = jax.random.randint(key, (3, 3, 16, 16), -128, 128, jnp.int32).astype(jnp.int8)
+    us = _time(lambda: conv2d_int8_op(x, w, jnp.zeros((16,), jnp.int32)))
+    print(f"kernel/conv2d_int8_16,{us:.0f},nhwc_vmem_tiles")
+
+
+def roofline():
+    print("\n## roofline — from the compiled dry-run (results/dryrun)")
+    print("name,us_per_call,derived")
+    d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+    if not os.path.isdir(d):
+        print("roofline/missing,0,run launch.dryrun_all first")
+        return
+    import glob
+    for f in sorted(glob.glob(os.path.join(d, "*__single.json"))):
+        r = json.load(open(f))
+        tag = f"{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            print(f"roofline/{tag},0,SKIP_full_attention")
+            continue
+        print(f"roofline/{tag},0,"
+              f"compute={r['an_compute_s']:.3g}s;memory={r['an_memory_s']:.3g}s;"
+              f"collective={r['an_collective_s']:.3g}s;"
+              f"bottleneck={r['an_bottleneck']};mfu_bound={r['an_mfu']:.3f}")
+
+
+def main() -> None:
+    table3_fps()
+    table4_buffers()
+    fig13_addfold()
+    kernels_micro()
+    roofline()
+
+
+if __name__ == "__main__":
+    main()

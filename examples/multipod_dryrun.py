@@ -1,0 +1,19 @@
+"""Drive the multi-pod dry-run programmatically for one cell and print the
+roofline summary — deliverable (e)/(g) in miniature.
+
+Run:  python examples/multipod_dryrun.py  (sets the device-count flag itself)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+res = run_cell("gemma-2b", "train_4k", multi_pod=True)
+print(f"cell: gemma-2b x train_4k on {res['chips']} chips (2 pods)")
+print(f"  compute  {res['an_compute_s']:.4f}s | memory {res['an_memory_s']:.4f}s"
+      f" | collective {res['an_collective_s']:.4f}s -> {res['an_bottleneck']}")
+print(f"  HLO collectives: {res['collective_counts']}")
+print(f"  fits 16G HBM: {res['fits_hbm']} "
+      f"(temp {res['temp_bytes_per_device']/2**30:.2f} GiB/device)")

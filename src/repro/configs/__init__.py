@@ -1,0 +1,2 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec,  # noqa: F401
+                                get_config, get_smoke_config, input_specs)

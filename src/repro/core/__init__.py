@@ -1,0 +1,3 @@
+"""Core: the paper's contribution — pow2-INT8 quantization, the residual-graph
+optimization passes, the dataflow buffer model, and the throughput balancer."""
+from repro.core import dataflow, graph, ilp, quant  # noqa: F401

@@ -1,0 +1,197 @@
+"""Dataflow buffer/stream sizing model (paper §III-E/F/G, eqs. 8-23) and the
+FPGA throughput/latency predictor used to validate against the paper's Table 3.
+
+This module is pure arithmetic (no jax) so it is trivially testable and usable
+by the ILP balancer and the benchmark harness.  It also exposes an HBM-traffic
+model for the TPU adaptation: the fused residual block saves exactly the skip
+tensor's HBM round trip, which is the TPU analogue of the BRAM saving that
+eq. 23 quantifies on the FPGA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+
+# ---------------------------------------------------------------------------
+# eq. 16/17 — window (line) buffer sizes
+# ---------------------------------------------------------------------------
+
+
+def window_buffer_size(iw: int, ich: int, fh: int, fw: int,
+                       ow_par: int = 1) -> int:
+    """Activations retained to produce one input window (eq. 16; eq. 17 for
+    ow_par=2 adds fw instead of fw-1)."""
+    if ow_par == 1:
+        return ((fh - 1) * iw + fw - 1) * ich
+    return ((fh - 1) * iw + fw) * ich
+
+
+def fifo_partition(iw: int, ich: int, fh: int, fw: int) -> List[int]:
+    """§III-F Fig. 7: the line buffer is split into fh*fw FIFO slices; S1=ich
+    between elements in a row, S2=(iw-fw+1)*ich between rows (so that the total
+    equals eq. 16).  Returns the slice sizes."""
+    s1 = ich
+    s2 = (iw - fw + 1) * ich
+    sizes = []
+    for r in range(fh):
+        for c in range(fw):
+            if r == fh - 1 and c == fw - 1:
+                sizes.append(0)        # newest element, not buffered
+            elif c == fw - 1:
+                sizes.append(s2)       # row boundary
+            else:
+                sizes.append(s1)
+    return sizes
+
+
+# ---------------------------------------------------------------------------
+# eq. 18-21 — receptive-field skip buffering (the *unoptimized* cost)
+# ---------------------------------------------------------------------------
+
+
+def receptive_field(fh0: int, fw0: int, fh1: int, fw1: int) -> tuple:
+    rh0 = fh1 + fh0 - 1            # eq. 18
+    rw0 = fw1 + fw0 - 1            # eq. 19
+    return rh0, rw0
+
+
+def skip_buffer_receptive_field(iw0: int, ich0: int, fh0: int, fw0: int,
+                                fh1: int, fw1: int) -> int:
+    """eq. 21: B_sc = [iw0*(rh0-1) + rw0] * ich0."""
+    rh0, rw0 = receptive_field(fh0, fw0, fh1, fw1)
+    return (iw0 * (rh0 - 1) + rw0) * ich0
+
+
+def skip_buffer_optimized(iw1: int, ich1: int, fh1: int, fw1: int) -> int:
+    """eq. 22: after temporal-reuse/loop-merge/add-fold the skip buffer equals
+    conv1's window buffer."""
+    return window_buffer_size(iw1, ich1, fh1, fw1)
+
+
+def skip_buffer_ratio(iw0, ich0, fh0, fw0, iw1, ich1, fh1, fw1) -> float:
+    """eq. 23: R_sc (= 0.5 for all ResNet8/20 blocks)."""
+    return (skip_buffer_optimized(iw1, ich1, fh1, fw1)
+            / skip_buffer_receptive_field(iw0, ich0, fh0, fw0, fh1, fw1))
+
+
+# ---------------------------------------------------------------------------
+# eq. 8-11 — per-layer work / parallelism / throughput
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ConvLayer:
+    """Static description of one convolution task (symbols of Table 1)."""
+    name: str
+    ich: int
+    ih: int
+    iw: int
+    och: int
+    oh: int
+    ow: int
+    fh: int = 3
+    fw: int = 3
+    stride: int = 1
+    skip_in: bool = False   # receives a folded residual stream
+
+    @property
+    def c(self) -> int:
+        """eq. 8 — computations per frame."""
+        return self.oh * self.ow * self.och * self.ich * self.fh * self.fw
+
+    @property
+    def k(self) -> int:
+        return self.fh * self.fw
+
+    @property
+    def macs(self) -> int:
+        return self.c
+
+    @property
+    def weights(self) -> int:
+        return self.och * self.ich * self.fh * self.fw
+
+    def cp(self, och_par: int, ow_par: int = 2) -> int:
+        """eq. 9 — computation parallelism of the task."""
+        return self.k * och_par * ow_par
+
+    def latency_cycles(self, och_par: int, ow_par: int = 2) -> float:
+        """cycles per frame = c / cp (perfectly pipelined intra-task loop)."""
+        return self.c / self.cp(och_par, ow_par)
+
+
+def throughput_fps(layer: ConvLayer, och_par: int, freq_hz: float,
+                   ow_par: int = 2) -> float:
+    """eq. 11 scaled by the clock: Th_i = freq * cp_i / c_i."""
+    return freq_hz * layer.cp(och_par, ow_par) / layer.c
+
+
+# ---------------------------------------------------------------------------
+# TPU adaptation: HBM traffic model of a residual block
+# ---------------------------------------------------------------------------
+
+
+def residual_block_hbm_bytes(h: int, w: int, ich: int, och: int,
+                             bytes_per_elt: int = 1, fused: bool = True,
+                             downsample: bool = False, stride: int = 1) -> int:
+    """HBM bytes moved by one residual block (activations only).
+
+    Unfused (naive) dataflow: x is read by conv0 AND by the skip path, the
+    intermediate y0 round-trips, conv1 output round-trips to the Add which
+    re-reads the skip tensor.  Fused (paper-adapted) kernel: x is read once,
+    y0 and the skip live in VMEM, only the block output is written.
+    """
+    oh, ow = h // stride, w // stride
+    x = h * w * ich * bytes_per_elt
+    y0 = oh * ow * och * bytes_per_elt
+    y1 = oh * ow * och * bytes_per_elt
+    skip = (oh * ow * och if downsample else h * w * ich) * bytes_per_elt
+    if fused:
+        return x + y1                         # read x once, write block output
+    # conv0 reads x, writes y0; conv1 reads y0, writes y1; skip path reads x
+    # (and writes the downsampled skip); add reads y1+skip, writes out.
+    traffic = x + y0 + y0 + y1 + x + y1 + skip + y1
+    if downsample:
+        traffic += skip
+    return traffic
+
+
+# ---------------------------------------------------------------------------
+# ResNet layer tables (mirrors graph.build_resnet_graph; used by ILP/benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def resnet_layers(blocks_per_stage: int, base: int = 16, img: int = 32
+                  ) -> List[ConvLayer]:
+    layers = [ConvLayer("stem", 3, img, img, base, img, img)]
+    ich, res, i = base, img, 0
+    for stage in range(3):
+        och = base * (2 ** stage)
+        for b in range(blocks_per_stage):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            ow = res // stride
+            layers.append(ConvLayer(f"c{i}_0", ich, res, res, och, ow, ow,
+                                    stride=stride))
+            layers.append(ConvLayer(f"c{i}_1", och, ow, ow, och, ow, ow,
+                                    skip_in=True))
+            if stride != 1 or ich != och:
+                layers.append(ConvLayer(f"ds{i}", ich, res, res, och, ow, ow,
+                                        fh=1, fw=1, stride=stride))
+            ich, res = och, ow
+            i += 1
+    return layers
+
+
+def resnet8_layers() -> List[ConvLayer]:
+    return resnet_layers(1)
+
+
+def resnet20_layers() -> List[ConvLayer]:
+    return resnet_layers(3)
+
+
+def total_gops(layers: List[ConvLayer]) -> float:
+    """2*MACs in Gops per frame (conv layers only, like the paper's Gops/s)."""
+    return 2.0 * sum(l.macs for l in layers) / 1e9

@@ -1,0 +1,315 @@
+"""QONNX-like NN graph IR + the paper's graph optimizations (§III-B, §III-G).
+
+The paper's flow parses a QONNX export of the quantized network and rewrites
+it before code generation.  We reproduce that stage as a small, testable IR:
+
+  passes (in the order the paper applies them):
+    1. ``fold_bn``        — merge BatchNorm into the preceding conv (§III-A)
+    2. ``merge_relu``     — fuse ReLU into the producing conv's requantization
+    3. ``loop_merge``     — residual block WITH downsample: merge the pointwise
+                            downsample conv into conv0's task (Fig. 12b)
+    4. ``temporal_reuse`` — residual block WITHOUT downsample: forward the
+                            skip stream out of conv0's window buffer (Fig. 12a)
+    5. ``add_fold``       — delete the Add node; the skip stream initializes
+                            conv1's accumulator (Fig. 13)
+
+After passes 3-5 every residual block is two fused tasks whose skip buffering
+is ``B_sc = B_1`` (eq. 22) instead of the receptive-field bound (eq. 21) —
+a 2x reduction (eq. 23), asserted in tests/test_graph.py.
+
+On TPU the rewritten graph is what ``kernels/resblock_fused`` executes and what
+``models/resnet.py`` mirrors at the jnp level (skip value initializes the
+accumulator of the second conv; no standalone Add, no extra HBM round-trip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import dataflow
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    op: str                       # conv | relu | bn | add | pool | linear | input | output
+    inputs: List[str]             # tensor names
+    outputs: List[str]
+    attrs: dict = dataclasses.field(default_factory=dict)
+    # set by passes:
+    fused: List[str] = dataclasses.field(default_factory=list)   # ops folded into this task
+    skip_out: bool = False        # emits a forwarded skip stream (temporal reuse / loop merge)
+    skip_in: Optional[str] = None  # tensor that initializes this conv's accumulator (add_fold)
+
+
+@dataclasses.dataclass
+class Graph:
+    nodes: List[Node]
+
+    def producers(self) -> Dict[str, Node]:
+        return {t: n for n in self.nodes for t in n.outputs}
+
+    def consumers(self) -> Dict[str, List[Node]]:
+        out: Dict[str, List[Node]] = {}
+        for n in self.nodes:
+            for t in n.inputs:
+                out.setdefault(t, []).append(n)
+        return out
+
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def remove(self, names):
+        names = set(names)
+        self.nodes = [n for n in self.nodes if n.name not in names]
+
+    def validate(self):
+        prod = self.producers()
+        for n in self.nodes:
+            for t in n.inputs:
+                if t not in prod and not t.startswith("%in"):
+                    raise ValueError(f"{n.name}: dangling input {t}")
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Pass 1-2: BN folding and ReLU merging
+# ---------------------------------------------------------------------------
+
+
+def fold_bn(g: Graph) -> Graph:
+    """conv -> bn  ==>  conv(with fused flag).  Weight arithmetic lives in
+    quant.fold_batchnorm; here we only rewrite the graph."""
+    prod = g.producers()
+    dead = []
+    for n in list(g.nodes):
+        if n.op != "bn":
+            continue
+        src = prod.get(n.inputs[0])
+        if src is not None and src.op == "conv":
+            src.fused.append("bn")
+            src.outputs = list(n.outputs)
+            dead.append(n.name)
+    g.remove(dead)
+    return g
+
+
+def merge_relu(g: Graph) -> Graph:
+    prod = g.producers()
+    dead = []
+    for n in list(g.nodes):
+        if n.op != "relu":
+            continue
+        src = prod.get(n.inputs[0])
+        if src is not None and src.op in ("conv", "add", "linear"):
+            src.fused.append("relu")
+            src.outputs = list(n.outputs)
+            dead.append(n.name)
+    g.remove(dead)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Residual block detection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResidualBlock:
+    producer: Node            # node whose output tensor feeds both branches
+    conv0: Node
+    conv1: Node
+    add: Node
+    downsample: Optional[Node]  # pointwise conv on the short branch, if any
+
+
+def find_residual_blocks(g: Graph) -> List[ResidualBlock]:
+    """A residual block = a tensor consumed by (a) a long branch conv chain of
+    length 2 and (b) either the Add directly or a pointwise conv then the Add."""
+    cons = g.consumers()
+    prod = g.producers()
+    blocks = []
+    for n in g.nodes:
+        if n.op != "add":
+            continue
+        a, b = n.inputs[:2]
+        pa, pb = prod.get(a), prod.get(b)
+        if pa is None or pb is None:
+            continue
+        # identify long branch: conv1 whose input comes from conv0
+        for long_end, short_end in ((pa, pb), (pb, pa)):
+            if long_end.op != "conv":
+                continue
+            conv0 = prod.get(long_end.inputs[0])
+            if conv0 is None or conv0.op != "conv":
+                continue
+            src_tensor = conv0.inputs[0]
+            # post-rewrite form (after loop_merge/temporal_reuse): the skip
+            # stream is emitted by conv0 itself as a secondary output
+            t_short = a if short_end is pa else b
+            if short_end is conv0 and conv0.skip_out and \
+                    t_short in conv0.outputs[1:]:
+                blocks.append(ResidualBlock(conv0, conv0, long_end, n, None))
+                break
+            # short branch: either src_tensor directly, or pointwise conv of it
+            if short_end.outputs and short_end.op == "conv" and \
+                    short_end.inputs[0] == src_tensor and \
+                    short_end.attrs.get("fh", 1) == 1 and short_end.attrs.get("fw", 1) == 1:
+                blocks.append(ResidualBlock(prod.get(src_tensor) or conv0, conv0,
+                                            long_end, n, short_end))
+                break
+            if short_end is prod.get(src_tensor) or (
+                    short_end.outputs and src_tensor in short_end.outputs):
+                blocks.append(ResidualBlock(short_end, conv0, long_end, n, None))
+                break
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Pass 3-5: the paper's residual optimizations
+# ---------------------------------------------------------------------------
+
+
+def loop_merge(g: Graph) -> Graph:
+    """Fig. 12b: residual block WITH downsample — merge the pointwise conv into
+    conv0's task, which then produces the downsampled skip stream as an
+    additional output at the same rate as its main output."""
+    for blk in find_residual_blocks(g):
+        if blk.downsample is None:
+            continue
+        ds = blk.downsample
+        blk.conv0.fused.append(f"downsample:{ds.name}")
+        blk.conv0.skip_out = True
+        skip_tensor = ds.outputs[0]
+        blk.conv0.outputs = blk.conv0.outputs + [skip_tensor]
+        g.remove([ds.name])
+    return g
+
+
+def temporal_reuse(g: Graph) -> Graph:
+    """Fig. 12a: residual block WITHOUT downsample — the skip stream is
+    forwarded from conv0's window buffer after last use (second output stream);
+    the tensor is never buffered twice."""
+    for blk in find_residual_blocks(g):
+        if blk.downsample is not None or blk.conv0.skip_out:
+            continue  # skip blocks already handled by loop_merge
+        src_tensor = blk.conv0.inputs[0]
+        fwd = src_tensor + ".fwd"
+        blk.conv0.fused.append("temporal_reuse")
+        blk.conv0.skip_out = True
+        blk.conv0.outputs = blk.conv0.outputs + [fwd]
+        # the add now consumes the forwarded copy
+        blk.add.inputs = [fwd if t == src_tensor else t for t in blk.add.inputs]
+    return g
+
+
+def add_fold(g: Graph) -> Graph:
+    """Fig. 13: remove the Add; its skip input initializes conv1's accumulator."""
+    for blk in find_residual_blocks(g):
+        add = blk.add
+        skip = [t for t in add.inputs if t not in blk.conv1.outputs]
+        if not skip:
+            continue
+        blk.conv1.skip_in = skip[0]
+        blk.conv1.fused.append("add_fold")
+        blk.conv1.fused.extend(f for f in add.fused)  # e.g. trailing relu
+        blk.conv1.outputs = list(add.outputs)
+        g.remove([add.name])
+    return g
+
+
+def optimize(g: Graph) -> Graph:
+    """The full §III-G pipeline in paper order."""
+    g = fold_bn(g)
+    g = merge_relu(g)
+    g = loop_merge(g)
+    g = temporal_reuse(g)
+    g = add_fold(g)
+    g.validate()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Buffering audit — ties the IR to the eq. 21/22 accounting
+# ---------------------------------------------------------------------------
+
+
+def skip_buffer_report(g_before: Graph, g_after: Graph) -> List[dict]:
+    """For every residual block, report the skip buffering before (receptive
+    field, eq. 21) and after (conv1 window buffer, eq. 22) optimization."""
+    out = []
+    g_before = merge_relu(fold_bn(g_before))  # blocks are visible post-folding
+    for blk in find_residual_blocks(g_before):
+        c0, c1 = blk.conv0.attrs, blk.conv1.attrs
+        before = dataflow.skip_buffer_receptive_field(
+            iw0=c0["iw"], ich0=c0["ich"], fh0=c0["fh"], fw0=c0["fw"],
+            fh1=c1["fh"], fw1=c1["fw"],
+        )
+        after = dataflow.window_buffer_size(
+            iw=c1["iw"], ich=c1["ich"], fh=c1["fh"], fw=c1["fw"]
+        )
+        out.append(dict(block=blk.add.name, before=before, after=after,
+                        ratio=after / before))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ResNet graph builders (for tests/benchmarks; mirrors models/resnet.py)
+# ---------------------------------------------------------------------------
+
+
+def _conv(name, tin, tout, ich, och, iw, ih, fh=3, fw=3, stride=1):
+    return Node(name, "conv", [tin], [tout],
+                dict(ich=ich, och=och, iw=iw, ih=ih, fh=fh, fw=fw, stride=stride,
+                     ow=iw // stride, oh=ih // stride))
+
+
+def build_resnet_graph(num_blocks_per_stage: int, base_width: int = 16,
+                       img: int = 32) -> Graph:
+    """CIFAR ResNet family (ResNet8: 1 block/stage; ResNet20: 3 blocks/stage)."""
+    nodes = [Node("input", "input", ["%in"], ["t0"])]
+    nodes.append(_conv("stem", "t0", "t1", 3, base_width, img, img))
+    nodes.append(Node("stem_bn", "bn", ["t1"], ["t1b"]))
+    nodes.append(Node("stem_relu", "relu", ["t1b"], ["t1r"]))
+    tin, ich, res, idx = "t1r", base_width, img, 0
+    for stage in range(3):
+        och = base_width * (2 ** stage)
+        for b in range(num_blocks_per_stage):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            ow = res // stride
+            t0 = f"s{stage}b{b}c0"
+            nodes.append(_conv(f"conv{idx}_0", tin, t0, ich, och, res, res,
+                               stride=stride))
+            nodes.append(Node(f"bn{idx}_0", "bn", [t0], [t0 + "b"]))
+            nodes.append(Node(f"relu{idx}_0", "relu", [t0 + "b"], [t0 + "r"]))
+            t1 = f"s{stage}b{b}c1"
+            nodes.append(_conv(f"conv{idx}_1", t0 + "r", t1, och, och, ow, ow))
+            nodes.append(Node(f"bn{idx}_1", "bn", [t1], [t1 + "b"]))
+            if stride != 1 or ich != och:
+                ds = f"s{stage}b{b}ds"
+                nodes.append(_conv(f"ds{idx}", tin, ds, ich, och, res, res,
+                                   fh=1, fw=1, stride=stride))
+                skip = ds
+            else:
+                skip = tin
+            tadd = f"s{stage}b{b}add"
+            nodes.append(Node(f"add{idx}", "add", [t1 + "b", skip], [tadd]))
+            nodes.append(Node(f"relu{idx}_a", "relu", [tadd], [tadd + "r"]))
+            tin, ich, res = tadd + "r", och, ow
+            idx += 1
+    nodes.append(Node("pool", "pool", [tin], ["tp"],
+                      dict(kind="avg", ih=res, iw=res, ich=ich)))
+    nodes.append(Node("fc", "linear", ["tp"], ["logits"], dict(din=ich, dout=10)))
+    nodes.append(Node("output", "output", ["logits"], []))
+    return Graph(nodes)
+
+
+def resnet8_graph() -> Graph:
+    return build_resnet_graph(1)
+
+
+def resnet20_graph() -> Graph:
+    return build_resnet_graph(3)

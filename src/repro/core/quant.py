@@ -1,0 +1,272 @@
+"""Power-of-two INT quantization (paper §III-A, eqs. 1-5).
+
+The paper quantizes weights and activations to 8-bit integers, biases to
+16 bits, and accumulates in 32 bits.  All scale factors are powers of two so
+that rescaling between quantization domains is a bit shift — hardware friendly
+on the FPGA DSP fabric and equally cheap on TPU integer ALUs.
+
+We reproduce the exact scheme:
+
+    a = Q(b) = clip(round(b * 2^(bw - s)), a_min, a_max) * 2^s      (eq. 1)
+
+with the *stored integer* being ``clip(round(b * 2^(bw-s)), ...)`` — note the
+paper's convention: ``s`` is an integer exponent and the representable range
+is eqs. (2)/(3).  The bias scale satisfies ``s_b = s_x + s_w`` so that the
+bias can be added directly onto the int32 accumulator of ``x*w`` products.
+
+Two views are provided:
+  * ``fake_quant``    — float-in/float-out clamp+round with a straight-through
+                        estimator; used during QAT training (Brevitas-style).
+  * ``quantize`` / ``dequantize`` — the true integer representation used by the
+                        integer inference graph (and by the Pallas kernels).
+
+``tests/test_quant.py`` asserts the QAT graph and the integer graph agree
+bit-exactly, which is the paper's loss-evaluation-matches-hardware property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Quantization spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QSpec:
+    """Static description of one quantized tensor domain.
+
+    Attributes:
+      bits:    total bit width (8 for weights/activations, 16 for biases).
+      signed:  signed (weights, biases, pre-ReLU activations) or unsigned
+               (post-ReLU activations).
+      exp:     the power-of-two exponent ``s`` of eq. (1).  The *integer* value
+               stored is ``round(x / 2**exp)``; the real value is ``int * 2**exp``.
+    """
+
+    bits: int = 8
+    signed: bool = True
+    exp: int = -7  # scale = 2**exp
+
+    @property
+    def scale(self) -> float:
+        return float(2.0 ** self.exp)
+
+    @property
+    def qmin(self) -> int:
+        # eq. (2)
+        return -(2 ** (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        # eq. (3)
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2**self.bits - 1
+
+    @property
+    def int_dtype(self):
+        if self.bits <= 8:
+            return jnp.int8 if self.signed else jnp.uint8
+        if self.bits <= 16:
+            return jnp.int16 if self.signed else jnp.uint16
+        return jnp.int32
+
+
+def bias_spec(x_spec: QSpec, w_spec: QSpec, bits: int = 16) -> QSpec:
+    """Paper: ``s_b = s_x + s_w`` so the int bias adds directly to the int32
+    accumulator of the product domain."""
+    return QSpec(bits=bits, signed=True, exp=x_spec.exp + w_spec.exp)
+
+
+def acc_bits(n_acc: int, bw: int = 8) -> int:
+    """eq. (5): accumulator width = ceil(log2(N_acc)) + 2*bw."""
+    return int(np.ceil(np.log2(n_acc))) + 2 * bw
+
+
+def n_acc(och: int, ich: int, fh: int, fw: int) -> int:
+    """eq. (4) — number of accumulations per output value.
+
+    NOTE: the paper writes ``och·ich·fh·fw`` (eq. 4) but the per-output-value
+    accumulation count is ``ich·fh·fw``; we keep the paper's expression for the
+    worst-case register sizing (it upper-bounds the true count)."""
+    return och * ich * fh * fw
+
+
+# ---------------------------------------------------------------------------
+# Core rounding / clipping
+# ---------------------------------------------------------------------------
+
+
+def _round_half_away(x: jnp.ndarray) -> jnp.ndarray:
+    # Brevitas/PyTorch use round-half-to-even by default for ``round``; the
+    # HLS flow rounds half away from zero.  We use half-away to match the
+    # C++ integer pipeline and keep the QAT graph identical.
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """Real -> stored integer (eq. 1 without the final *2**s)."""
+    q = _round_half_away(x * (2.0 ** (-spec.exp)))
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    return q.astype(spec.int_dtype)
+
+
+def dequantize(q: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    return q.astype(jnp.float32) * spec.scale
+
+
+@jax.custom_vjp
+def _ste_round_clip(x: jnp.ndarray, qmin: float, qmax: float) -> jnp.ndarray:
+    r = _round_half_away(x)
+    return jnp.clip(r, qmin, qmax)
+
+
+def _ste_fwd(x, qmin, qmax):
+    return _ste_round_clip(x, qmin, qmax), (x, qmin, qmax)
+
+
+def _ste_bwd(res, g):
+    x, qmin, qmax = res
+    # straight-through inside the clipping range, zero outside
+    pass_through = jnp.logical_and(x >= qmin, x <= qmax)
+    return (jnp.where(pass_through, g, 0.0), None, None)
+
+
+_ste_round_clip.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
+    """QAT fake quantization: float->float, STE gradient.
+
+    ``fake_quant(x) == dequantize(quantize(x))`` exactly (asserted in tests).
+    """
+    inv = 2.0 ** (-spec.exp)
+    q = _ste_round_clip(x * inv, float(spec.qmin), float(spec.qmax))
+    return q * spec.scale
+
+
+# ---------------------------------------------------------------------------
+# Calibration — choose the power-of-two exponent
+# ---------------------------------------------------------------------------
+
+
+def calibrate_exp(x: jnp.ndarray, spec: QSpec, percentile: float = 100.0) -> int:
+    """Smallest power-of-two exponent that covers the (percentile-clipped)
+    dynamic range.  Returns the integer ``s`` for a QSpec."""
+    x = jnp.asarray(x)
+    if percentile >= 100.0:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.percentile(jnp.abs(x), percentile)
+    amax = float(jnp.maximum(amax, 1e-12))
+    # need amax <= qmax * 2**exp  =>  exp >= log2(amax / qmax)
+    return int(np.ceil(np.log2(amax / spec.qmax)))
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear algebra helpers (integer inference path)
+# ---------------------------------------------------------------------------
+
+
+def qdot_int32(xq: jnp.ndarray, wq: jnp.ndarray, dimension_numbers=None) -> jnp.ndarray:
+    """int8 x int8 -> int32 contraction.  On TPU this hits the MXU int8 path
+    (2x bf16 throughput) — the paper's DSP-packing goal is a native primitive
+    here (see DESIGN.md §2)."""
+    if dimension_numbers is None:
+        return jax.lax.dot(xq, wq, preferred_element_type=jnp.int32)
+    return jax.lax.dot_general(
+        xq, wq, dimension_numbers, preferred_element_type=jnp.int32
+    )
+
+
+def requantize_shift(acc: jnp.ndarray, from_exp: int, to_spec: QSpec) -> jnp.ndarray:
+    """int32 accumulator (scale 2**from_exp) -> int in ``to_spec`` domain via a
+    bit shift with round-half-away — pure integer arithmetic (the hardware op)."""
+    shift = to_spec.exp - from_exp
+    if shift <= 0:
+        q = acc.astype(jnp.int32) << (-shift)
+    else:
+        # rounding shift: add half before shifting
+        half = jnp.int32(1) << (shift - 1)
+        q = (acc.astype(jnp.int32) + half) >> shift
+    q = jnp.clip(q, to_spec.qmin, to_spec.qmax)
+    return q.astype(to_spec.int_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 (pow2 scale) tensor codec — used for int8 KV caches,
+# optimizer-state quantization and compressed gradient all-reduce.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockQuantized:
+    """A tensor stored as int8 payload + per-block pow2 exponents."""
+
+    q: jnp.ndarray          # int8, same shape as original
+    exp: jnp.ndarray        # int8 exponents, shape = blocks along last dim
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.size + self.exp.size
+
+
+def block_quantize(x: jnp.ndarray, block: int = 128) -> BlockQuantized:
+    """Quantize along the last dim in blocks with per-block power-of-two scale.
+
+    The exponent per block is ceil(log2(amax/127)) — same rule as
+    ``calibrate_exp`` — so dequantization is ``q * 2**exp`` (a shift)."""
+    shape = x.shape
+    last = shape[-1]
+    pad = (-last) % block
+    xf = x.astype(jnp.float32)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xf.reshape(shape[:-1] + ((last + pad) // block, block))
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    amax = jnp.maximum(amax, 1e-12)
+    e = jnp.ceil(jnp.log2(amax / 127.0))
+    e = jnp.clip(e, -127, 127)
+    q = _round_half_away(xb * 2.0 ** (-e))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    q = q.reshape(shape[:-1] + (last + pad,))[..., :last]
+    return BlockQuantized(q=q, exp=e.squeeze(-1).astype(jnp.int8))
+
+
+def block_dequantize(bq: BlockQuantized, block: int = 128) -> jnp.ndarray:
+    shape = bq.q.shape
+    last = shape[-1]
+    pad = (-last) % block
+    qf = bq.q.astype(jnp.float32)
+    if pad:
+        qf = jnp.pad(qf, [(0, 0)] * (qf.ndim - 1) + [(0, pad)])
+    qb = qf.reshape(shape[:-1] + ((last + pad) // block, block))
+    x = qb * 2.0 ** bq.exp.astype(jnp.float32)[..., None]
+    return x.reshape(shape[:-1] + (last + pad,))[..., :last]
+
+
+jax.tree_util.register_pytree_node(
+    BlockQuantized,
+    lambda b: ((b.q, b.exp), None),
+    lambda _, ch: BlockQuantized(*ch),
+)
+
+
+# ---------------------------------------------------------------------------
+# Batch-norm folding (paper §III-A: BN merged into the quantized conv, then
+# re-calibrated).
+# ---------------------------------------------------------------------------
+
+
+def fold_batchnorm(w, b, gamma, beta, mean, var, eps=1e-5):
+    """Return (w', b') implementing conv(x,w')+b' == BN(conv(x,w)+b).
+
+    w: (fh, fw, ich, och) NHWC conv weight; BN params are per-och."""
+    inv = gamma / jnp.sqrt(var + eps)
+    w_f = w * inv  # broadcast over last (och) dim
+    b_f = (b - mean) * inv + beta
+    return w_f, b_f

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's compute hot-spots.  Each subpackage has
+# <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and ref.py
+# (pure-jnp oracle); tests sweep shapes/dtypes and assert allclose.

@@ -1,0 +1,8 @@
+"""Shared kernel utilities."""
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode off-TPU (this container is
+    CPU-only; TPU v5e is the compile target)."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,83 @@
+"""INT8 NHWC conv2d Pallas kernel (paper's convolution computation task).
+
+TPU adaptation of §III-C/III-F: instead of an FPGA line buffer streaming one
+window per cycle, each grid step holds one image's (padded) feature map in
+VMEM — CIFAR-scale maps are tiny (32*32*16 int8 = 16 KiB) — and issues one
+MXU ``dot`` per filter tap, accumulating in int32.  The filter loop is fully
+unrolled (the paper unrolls fh*fw in hardware); requantization back to int8
+is a power-of-two shift done in the epilogue.
+
+Grid: (N,).  BlockSpecs give the kernel the whole padded image, the filter,
+the bias, and (optionally) an int32 skip stream to initialize the accumulator
+(add-fold).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, s_ref, o_ref, *, fh, fw, stride, oh, ow,
+            has_skip, relu, out_shift):
+    x = x_ref[0]                       # (Hp, Wp, C) int8
+    w = w_ref[...]                     # (fh, fw, C, O)
+    acc = (s_ref[0].astype(jnp.int32) if has_skip
+           else jnp.zeros((oh, ow, w.shape[-1]), jnp.int32))
+    acc = acc + b_ref[...].astype(jnp.int32)
+    for kh in range(fh):
+        for kw in range(fw):
+            xs = jax.lax.slice(
+                x, (kh, kw, 0),
+                (kh + (oh - 1) * stride + 1, kw + (ow - 1) * stride + 1,
+                 x.shape[2]),
+                (stride, stride, 1))   # (oh, ow, C)
+            acc += jax.lax.dot(
+                xs.reshape(oh * ow, -1).astype(jnp.int32),
+                w[kh, kw].astype(jnp.int32),
+                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if out_shift is not None:
+        # pow2 requantization (paper: rescale == bit shift)
+        if out_shift > 0:
+            half = jnp.int32(1) << (out_shift - 1)
+            acc = (acc + half) >> out_shift
+        acc = jnp.clip(acc, 0 if relu else -128, 255 if relu else 127)
+        o_ref[0] = acc.astype(o_ref.dtype)
+    else:
+        o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv2d_int8(x, w, b, skip=None, *, stride=1, relu=False, out_shift=None,
+                interpret=False):
+    """x: (N,H,W,C) int8 *already padded* for SAME (pad=(fh-1)//2 applied by
+    the caller); w: (fh,fw,C,O) int8; b: (O,) int32; skip: (N,OH,OW,O) int32.
+
+    Returns int32 accumulator map (or int8/uint8 if out_shift is given)."""
+    N, Hp, Wp, C = x.shape
+    fh, fw, C2, O = w.shape
+    assert C == C2
+    oh = (Hp - fh) // stride + 1
+    ow = (Wp - fw) // stride + 1
+    has_skip = skip is not None
+    if skip is None:
+        skip = jnp.zeros((N, oh, ow, O), jnp.int32)
+    out_dtype = jnp.int32 if out_shift is None else (
+        jnp.uint8 if relu else jnp.int8)
+    return pl.pallas_call(
+        functools.partial(_kernel, fh=fh, fw=fw, stride=stride, oh=oh, ow=ow,
+                          has_skip=has_skip, relu=relu, out_shift=out_shift),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, C), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, C, O), lambda n: (0, 0, 0, 0)),
+            pl.BlockSpec((O,), lambda n: (0,)),
+            pl.BlockSpec((1, oh, ow, O), lambda n: (n, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, O), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, oh, ow, O), out_dtype),
+        interpret=interpret,
+    )(x, w, b, skip)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for conv2d_int8 (handles SAME padding)."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.conv2d_int8.conv2d_int8 import conv2d_int8
+
+
+@partial(jax.jit, static_argnames=("stride", "relu", "out_shift"))
+def conv2d_int8_op(x, w, b, skip=None, *, stride=1, relu=False,
+                   out_shift=None):
+    """SAME conv: pads x then calls the kernel."""
+    fh, fw = w.shape[0], w.shape[1]
+    ph, pw = (fh - 1) // 2, (fw - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (ph, fh - 1 - ph), (pw, fw - 1 - pw), (0, 0)))
+    return conv2d_int8(xp, w, b, skip, stride=stride, relu=relu,
+                       out_shift=out_shift, interpret=use_interpret())

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for conv2d_int8 (on pre-padded input)."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_int8_ref(x, w, b, skip=None, *, stride=1, relu=False,
+                    out_shift=None):
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    acc = acc + b.astype(jnp.int32)
+    if skip is not None:
+        acc = acc + skip.astype(jnp.int32)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if out_shift is not None:
+        if out_shift > 0:
+            acc = (acc + (1 << (out_shift - 1))) >> out_shift
+        acc = jnp.clip(acc, 0 if relu else -128, 255 if relu else 127)
+        return acc.astype(jnp.uint8 if relu else jnp.int8)
+    return acc

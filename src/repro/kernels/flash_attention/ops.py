@@ -1,0 +1,24 @@
+"""Jitted GQA-aware wrapper for the flash-attention kernel."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention_op(q, k, v, *, causal=True, bq=128, bk=128):
+    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    o = flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                        interpret=use_interpret())
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,13 @@
+"""Jitted public wrapper for the int8 matmul kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.matmul_int8.matmul_int8 import matmul_int8
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_int8_op(a, b, acc_init=None, *, bm=128, bn=128, bk=128):
+    return matmul_int8(a, b, acc_init, bm=bm, bn=bn, bk=bk,
+                       interpret=use_interpret())

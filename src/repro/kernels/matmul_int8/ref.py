@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for matmul_int8."""
+import jax.numpy as jnp
+
+
+def matmul_int8_ref(a, b, acc_init=None):
+    y = a.astype(jnp.int32) @ b.astype(jnp.int32)
+    if acc_init is not None:
+        y = y + acc_init.astype(jnp.int32)
+    return y

@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the fused residual block."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.resblock_fused.resblock_fused import resblock_fused
+
+
+@partial(jax.jit, static_argnames=("shift0", "shift1", "skip_shift"))
+def resblock_fused_op(x, w0, b0, w1, b1, *, shift0, shift1, skip_shift=0):
+    """x: (N,H,W,C) uint8 (unpadded).  SAME 3x3 padding applied here."""
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return resblock_fused(xp, w0, b0, w1, b1, shift0=shift0, shift1=shift1,
+                          skip_shift=skip_shift, interpret=use_interpret())

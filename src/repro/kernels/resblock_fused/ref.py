@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused residual block (unfused dataflow graph:
+conv0 -> relu/requant -> conv1 -> +skip -> relu/requant, each tensor
+round-tripping through 'HBM')."""
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, b):
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    return acc + b.astype(jnp.int32)
+
+
+def _requant(acc, shift, relu=True):
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    return jnp.clip(acc, 0, 255)
+
+
+def resblock_ref(x, w0, b0, w1, b1, *, shift0, shift1, skip_shift=0):
+    """x: (N,H+2,W+2,C) uint8 pre-padded."""
+    acc0 = _conv(x, w0, b0)
+    y0 = _requant(acc0, shift0).astype(jnp.uint8)
+    y0p = jnp.pad(y0, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    skip = x[:, 1:-1, 1:-1, :].astype(jnp.int32) << skip_shift
+    acc1 = _conv(y0p, w1, b1) + skip
+    return _requant(acc1, shift1).astype(jnp.uint8)

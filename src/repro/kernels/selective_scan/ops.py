@@ -1,0 +1,13 @@
+"""Jitted public wrapper for the selective-scan kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.common import use_interpret
+from repro.kernels.selective_scan.selective_scan import selective_scan
+
+
+@partial(jax.jit, static_argnames=("bd",))
+def selective_scan_op(u, dt, A, Bc, Cc, h0, *, bd=128):
+    return selective_scan(u, dt, A, Bc, Cc, h0, bd=bd,
+                          interpret=use_interpret())

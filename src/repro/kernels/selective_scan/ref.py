@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: naive sequential selective scan."""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, A, Bc, Cc, h0):
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        a = jnp.exp(dt_t[:, :, None] * A)
+        h = a * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.swapaxes(t, 0, 1) for t in (u, dt, Bc, Cc))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1), h

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), print memory/cost analysis, and
+extract the roofline terms (compute / memory / collective seconds).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k [--multi-pod] [--out results.json]
+
+The collective term is parsed from the optimized (SPMD-partitioned) HLO —
+cost_analysis does not report it (see DESIGN.md / EXPERIMENTS.md §Roofline).
+"""
+
+import argparse
+import json
+import re
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import base as cbase
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import (default_optimizer, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import model as M
+from repro.parallel import ctx
+from repro.parallel import sharding as shd
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _array_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the optimized HLO
+    (per-device program => per-device bytes moved)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        for c in _COLLECTIVES:
+            # result shape(s) precede the op name on the RHS:
+            #   %x = bf16[16,2048]{1,0} all-reduce(...)
+            # skip the -done halves of async pairs (same shape as -start)
+            m = re.search(rf"\b{c}(-start)?\(", rhs)
+            if m and f"{c}-done" not in rhs:
+                nbytes = sum(_array_bytes(d, s)
+                             for d, s in _ARRAY_RE.findall(rhs[:m.start()]))
+                out[c] += nbytes
+                counts[c] += 1
+                break
+    out["counts"] = counts
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        c = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c)
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if m is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: getattr(m, k, None) for k in keys}
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides=None):
+    """Returns (mesh, jitted_fn, arg_specs) for one cell."""
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg = cbase.get_config(arch)
+    cfg_overrides = dict(cfg_overrides or {})
+    grad_accum_override = cfg_overrides.pop("grad_accum", None)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    shape = cbase.SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        raise SystemExit(f"SKIP: {arch} does not support {shape_name} "
+                         f"(full attention; see DESIGN.md §4)")
+    sharding = shd.input_sharding_factory(mesh)
+    batch = cbase.input_specs(cfg, shape, sharding)
+    p_shapes = M.param_shapes(cfg)
+    p_shard = shd.params_shardings(p_shapes, mesh)
+    p_specs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        p_shapes, p_shard)
+
+    meta = dict(grad_accum=1)
+    if shape.kind == "train":
+        opt = default_optimizer(cfg)
+        o_shapes = jax.eval_shape(opt.init, p_specs)
+        o_shard = shd.params_shardings(o_shapes, mesh)
+        o_specs = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            o_shapes, o_shard)
+        # default microbatching: ~2 sequences per data shard per microstep
+        data_ways = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                                 if a in ("pod", "data")]))
+        grad_accum = max(1, shape.global_batch // (2 * data_ways))
+        if grad_accum_override is not None:
+            grad_accum = grad_accum_override
+        meta["grad_accum"] = grad_accum
+        step_fn = make_train_step(cfg, opt, grad_accum=grad_accum)
+        fn = jax.jit(step_fn,
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        args = (p_specs, o_specs,
+                jax.ShapeDtypeStruct((), np.int32), batch)
+    elif shape.kind == "prefill":
+        fn = jax.jit(make_prefill_step(cfg))
+        args = (p_specs, batch)
+    else:
+        cache_shard = {k: v.sharding for k, v in batch["cache"].items()}
+        fn = jax.jit(make_serve_step(cfg),
+                     out_shardings=(None, cache_shard),
+                     donate_argnums=())
+        args = (p_specs, batch)
+    return mesh, cfg, shape, fn, args, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             want_hlo: bool = True, cfg_overrides=None) -> dict:
+    mesh, cfg, shape, fn, args, meta = build_cell(arch, shape_name, multi_pod,
+                                                  cfg_overrides)
+    n_chips = mesh.devices.size
+    with ctx.mesh_context(mesh):
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    cost = _cost_dict(compiled)
+    memory = _memory_dict(compiled)
+    coll = collective_bytes(compiled.as_text()) if want_hlo else {}
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total", 0.0))
+    compute_s = flops_dev / mesh_lib.PEAK_BF16_FLOPS
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    collective_s = coll_dev / mesh_lib.ICI_BW
+    model_fl = M.model_flops(cfg, shape)
+    result = dict(
+        arch=arch, shape=shape_name, multi_pod=multi_pod, chips=int(n_chips),
+        params=M.param_count(cfg),
+        active_params=M.active_param_count(cfg),
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=coll_dev,
+        collective_detail={k: v for k, v in coll.items() if k != "counts"},
+        collective_counts=coll.get("counts", {}),
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda t: t[1])[0],
+        model_flops=model_fl,
+        model_flops_per_device=model_fl / n_chips,
+        useful_flops_ratio=(model_fl / n_chips / flops_dev
+                            if flops_dev else None),
+        memory_analysis=memory,
+        temp_bytes_per_device=memory.get("temp_size_in_bytes"),
+        argument_bytes_per_device=memory.get("argument_size_in_bytes"),
+    )
+    arg_b = memory.get("argument_size_in_bytes") or 0
+    tmp_b = memory.get("temp_size_in_bytes") or 0
+    out_b = memory.get("output_size_in_bytes") or 0
+    alias_b = memory.get("alias_size_in_bytes") or 0
+    result["hbm_required_bytes"] = arg_b + tmp_b + max(0, out_b - alias_b)
+    result["fits_hbm"] = result["hbm_required_bytes"] <= mesh_lib.HBM_BYTES
+    result["grad_accum"] = meta["grad_accum"]
+    # analytic roofline terms (corrects XLA's scan-body-once counting)
+    from repro.launch.analytic import Cell, analytic_terms
+    fsdp = int(np.prod([mesh.shape[a] for a in mesh.axis_names
+                        if a in ("pod", "data")]))
+    opt_b = 2.1 if M.param_count(cfg) > 5e10 else 8.0
+    result.update(analytic_terms(Cell(
+        cfg=cfg, shape=shape, chips=int(n_chips), tp=mesh.shape["model"],
+        fsdp=fsdp, grad_accum=meta["grad_accum"],
+        opt_state_bytes_per_param=opt_b)))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(cbase.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf experiments)")
+    args = ap.parse_args(argv)
+    overrides = json.loads(args.override) if args.override else None
+    res = run_cell(args.arch, args.shape, args.multi_pod,
+                   cfg_overrides=overrides)
+    print(json.dumps(res, indent=2, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Step builders shared by the dry-run, the trainer and the server."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(cfg, opt, grad_accum: int = 1):
+    """(params, opt_state, step, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 scans over microbatches, accumulating gradients — bounds
+    activation memory at the listed global batch sizes (the optimizer step
+    and gradient communication still happen once per step)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+
+    def train_step(params, opt_state, step, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], ms)
+        new_params, new_state = opt.update(grads, opt_state, params, step)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        extra = {k: v for k, v in batch.items() if k in ("frames", "patches")}
+        return M.prefill(params, cfg, batch["tokens"], extra)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One decode step: new token against a deep KV cache/SSM state."""
+
+    def serve_step(params, batch):
+        logits, cache = M.decode_step(params, cfg, batch["tokens"],
+                                      batch["pos"], batch["cache"])
+        return logits, cache
+
+    return serve_step
+
+
+def default_optimizer(cfg, total_steps=10_000):
+    """AdamW with int8 pow2 moments for the huge archs (DESIGN.md §5)."""
+    big = M.param_count(cfg) > 5e10
+    return opt_lib.adamw(total_steps=total_steps, int8_state=big)

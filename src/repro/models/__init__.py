@@ -1,0 +1,1 @@
+from repro.models import layers, model, resnet  # noqa: F401

@@ -1,0 +1,174 @@
+"""Hybrid Mamba2 + shared-attention LM (zamba2-7b).
+
+Structure: ``num_layers`` Mamba2 (SSD) blocks; after every
+``shared_block_period``-th block the single *shared* transformer block
+(attention + MLP, one weight set reused at every call site) is applied —
+the Zamba2 design.  Layers are scanned in groups of ``period`` so the shared
+block's per-call-site KV cache slots scan along with the groups; the remainder
+(num_layers % period) Mamba2 layers run as a tail stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel import ctx
+
+
+def _mamba_blk_init(cfg, d):
+    def blk(k):
+        return dict(ln=L.norm_init(cfg, d),
+                    mamba=L.mamba2_init(k, cfg, d, cfg.pdtype))
+    return blk
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d, V = cfg.d_model, cfg.vocab_size
+    period = cfg.shared_block_period
+    n_groups = cfg.num_layers // period
+    rem = cfg.num_layers - n_groups * period
+    blk = _mamba_blk_init(cfg, d)
+    gkeys = jax.random.split(ks[0], n_groups * period)
+    gkeys = gkeys.reshape((n_groups, period) + gkeys.shape[1:])
+    grouped = jax.vmap(jax.vmap(blk))(gkeys)
+    p = dict(
+        embed=L._init(ks[1], (V, d), cfg.pdtype, scale=1.0),
+        groups=grouped,
+        shared=dict(
+            ln1=L.norm_init(cfg, d),
+            attn=L.gqa_init(ks[2], cfg, d, cfg.pdtype),
+            ln2=L.norm_init(cfg, d),
+            mlp=L.mlp_init(ks[3], cfg, d, cfg.d_ff, cfg.pdtype),
+        ),
+        final_norm=L.norm_init(cfg, d),
+        unembed=L.dense_init(ks[4], d, V, cfg.pdtype),
+    )
+    if rem:
+        p["tail"] = jax.vmap(blk)(jax.random.split(ks[5], rem))
+    return p
+
+
+def _mamba_block(p, h, cfg, state=None):
+    skip = h
+    m, ns = L.mamba2_apply(p["mamba"], L.norm(h, p["ln"], cfg), cfg,
+                           state=state,
+                           acc_init=skip if cfg.residual_fusion else None)
+    return (m if cfg.residual_fusion else h + m), ns
+
+
+def _shared_block(p, h, cfg, cache=None, pos=None):
+    skip = h
+    a, kv = L.gqa_apply(p["attn"], L.norm(h, p["ln1"], cfg), cfg,
+                        cache=cache, pos=pos,
+                        acc_init=skip if cfg.residual_fusion else None)
+    h = a if cfg.residual_fusion else h + a
+    skip = h
+    m = L.mlp_apply(p["mlp"], L.norm(h, p["ln2"], cfg), cfg,
+                    acc_init=skip if cfg.residual_fusion else None)
+    return (m if cfg.residual_fusion else h + m), kv
+
+
+def _run(params, cfg, h, *, states=None, kv=None, pos=None):
+    """states/kv: None for train/prefill; decode state pytrees otherwise."""
+    period = cfg.shared_block_period
+    n_groups = cfg.num_layers // period
+    rem = cfg.num_layers - n_groups * period
+    decode = states is not None
+
+    def group_body(h, xs):
+        gp, gstate, gkv = xs
+        h = ctx.constrain(h, ctx.batch_axes(), None, None)
+
+        def layer_body(h, ys):
+            p, st = ys
+            hn, ns = _mamba_block(p, h, cfg, state=st)
+            return hn, ns
+
+        if decode:
+            h, new_states = jax.lax.scan(layer_body, h, (gp, gstate))
+        else:
+            h, _ = jax.lax.scan(lambda hh, pp: layer_body(hh, (pp, None)),
+                                h, gp)
+            new_states = None
+        h, new_kv = _shared_block(params["shared"], h, cfg, cache=gkv, pos=pos)
+        return h, (new_states, new_kv)
+
+    if cfg.remat and not decode:
+        group_body = jax.checkpoint(
+            group_body,
+            policy=(jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat_policy == "dots" else None))
+
+    if decode:
+        gstates = jax.tree_util.tree_map(
+            lambda x: x[:n_groups * period].reshape(
+                (n_groups, period) + x.shape[1:]), states)
+        h, (new_states, new_kv) = jax.lax.scan(
+            group_body, h, (params["groups"], gstates, kv))
+        new_states = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_groups * period,) + x.shape[2:]), new_states)
+    else:
+        h, _ = jax.lax.scan(lambda hh, gp: group_body(hh, (gp, None, None)),
+                            h, params["groups"])
+        new_states, new_kv = None, None
+
+    if rem:
+        if decode:
+            tstates = jax.tree_util.tree_map(
+                lambda x: x[n_groups * period:], states)
+
+            def tail_body(h, ys):
+                p, st = ys
+                return _mamba_block(p, h, cfg, state=st)
+
+            h, tail_states = jax.lax.scan(tail_body, h,
+                                          (params["tail"], tstates))
+            new_states = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), new_states,
+                tail_states)
+        else:
+            body = lambda hh, pp: _mamba_block(pp, hh, cfg)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            h, _ = jax.lax.scan(body, h, params["tail"])
+    return h, new_states, new_kv
+
+
+def hidden_states(params, cfg, tokens, extra=None):
+    h = ctx.sharded_take(params["embed"], tokens).astype(cfg.compute_dtype)
+    h, _, _ = _run(params, cfg, h)
+    return L.norm(h, params["final_norm"], cfg)
+
+
+def loss_fn(params, cfg, batch):
+    h = hidden_states(params, cfg, batch["tokens"])
+    emb = ctx.constrain(params["unembed"].T.astype(cfg.compute_dtype),
+                        "model", None)
+    s, cnt = L.chunked_xent(h, emb, batch["labels"], cfg.loss_chunk)
+    loss = s / jnp.maximum(cnt, 1)
+    return loss, dict(loss=loss, tokens=cnt)
+
+
+def prefill(params, cfg, tokens, extra=None):
+    h = hidden_states(params, cfg, tokens, extra)
+    return jnp.matmul(h[:, -1:], params["unembed"].astype(h.dtype))
+
+
+def decode_step(params, cfg, tokens, pos, cache):
+    h = ctx.sharded_take(params["embed"], tokens).astype(cfg.compute_dtype)
+    states = dict(ssm=cache["ssm_state"], conv=cache["conv_state"])
+    # per-layer state dicts scanned over the leading L axis
+    per_layer_states = {"ssm": states["ssm"], "conv": states["conv"]}
+    kv = dict(k=cache["k"], v=cache["v"])
+    h, new_states, new_kv = _run(
+        params, cfg, h,
+        states=dict(ssm=per_layer_states["ssm"], conv=per_layer_states["conv"]),
+        kv=kv, pos=pos)
+    h = L.norm(h, params["final_norm"], cfg)
+    logits = jnp.matmul(h, params["unembed"].astype(h.dtype))
+    return logits, dict(ssm_state=new_states["ssm"],
+                        conv_state=new_states["conv"],
+                        k=new_kv["k"], v=new_kv["v"])

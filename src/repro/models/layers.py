@@ -1,0 +1,750 @@
+"""Model building blocks (pure-functional JAX).
+
+Everything here is written so that the *paper's technique* threads through:
+
+* ``dense()`` is the single matmul entry point — it applies the pow2-INT8
+  QAT fake-quantization (core.quant) when ``cfg.quant == "qat"`` and accepts an
+  ``acc_init`` operand implementing the paper's add-fold: the residual/skip
+  stream initializes the accumulator of the *next* matmul instead of being a
+  standalone Add (DESIGN.md §2).  The Pallas matmul kernel has the same
+  signature; the XLA path keeps identical arithmetic.
+* attention / losses are chunked so the 32k/500k cells compile with bounded
+  activation memory (the TPU analogue of the paper's line buffering: keep only
+  the working window on-chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    return _init(key, (d_in, d_out), dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# pow2 fake quant (dynamic per-tensor exponent, STE) — paper eq. 1-3 in QAT
+# ---------------------------------------------------------------------------
+
+
+def _fq8(x):
+    """Power-of-two-scale int8 fake quantization with dynamic range."""
+    amax = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+    amax = jnp.maximum(amax, 1e-8)
+    e = jnp.ceil(jnp.log2(amax / 127.0))
+    scale = jnp.exp2(e).astype(x.dtype)
+    spec_like = x / scale
+    q = Q._ste_round_clip(spec_like.astype(jnp.float32), -128.0, 127.0)
+    return (q.astype(x.dtype)) * scale
+
+
+def getw(w, dtype=None):
+    """Materialize a weight: int8w-quantized weights (pow2-block int8,
+    core.quant.BlockQuantized) are dequantized HERE, i.e. *after* any
+    FSDP all-gather — the gather moves int8 payload, 2x less ICI traffic
+    than bf16 (the paper's quantization applied to the collective)."""
+    if isinstance(w, Q.BlockQuantized):
+        w = Q.block_dequantize(w)
+    if dtype is not None:
+        w = w.astype(dtype)
+    return w
+
+
+def slice_expert(w, e):
+    """Per-expert slice that preserves int8w storage until use."""
+    if isinstance(w, Q.BlockQuantized):
+        return Q.BlockQuantized(w.q[e], w.exp[e])
+    return w[e]
+
+
+def dense(x, w, b=None, *, cfg=None, acc_init=None, precision=None):
+    """x @ w (+ b) (+ acc_init).
+
+    ``acc_init`` is the paper's add-fold (Fig. 13): the skip stream enters as
+    the accumulator initializer of this matmul.  With the Pallas backend this
+    is literally the kernel's accumulator init; under XLA it fuses to the same
+    thing."""
+    w = getw(w, x.dtype)
+    if cfg is not None and cfg.quant == "qat":
+        x = _fq8(x)
+        w = _fq8(w)
+    y = jnp.matmul(x, w, precision=precision)
+    if b is not None:
+        y = y + b
+    if acc_init is not None:
+        y = y + acc_init
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    n = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (n * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    n = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (n * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, params, cfg):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def norm_init(cfg, d):
+    if cfg.norm_type == "layernorm":
+        return dict(scale=jnp.ones((d,), jnp.float32),
+                    bias=jnp.zeros((d,), jnp.float32))
+    return dict(scale=jnp.zeros((d,), jnp.float32))
+
+
+def act_fn(kind):
+    if kind == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if kind in ("silu", "geglu"):
+        return jax.nn.silu if kind == "silu" else jax.nn.gelu
+    raise ValueError(kind)
+
+
+def rope(x, pos, theta):
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs  # (..., S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA/MQA, optional sliding window, chunked over queries)
+# ---------------------------------------------------------------------------
+
+
+def _attn_scores_mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m
+
+
+def _attn_block(q, k, v, qpos, kpos, causal, window, softcap=0.0):
+    """q (B,Sq,H,hd) k/v (B,Sk,KV,hd) -> (B,Sq,H,hd).  GQA by reshape."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32) * (1.0 / np.sqrt(hd))
+    qg = qf.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = _attn_scores_mask(qpos, kpos, causal, window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=None, chunk=0,
+              softcap=0.0):
+    """Chunked (over queries) masked attention.
+
+    Memory is O(chunk * Sk) per step instead of O(Sq * Sk) — the TPU analogue
+    of the paper's window buffering: only the active query window's scores
+    live on-chip.  FLOP note: masked positions are still computed (the causal
+    upper triangle); see EXPERIMENTS.md §Roofline "useful-flops ratio".
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    qpos0 = jnp.arange(Sq) if q_offset is None else q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    if chunk <= 0 or Sq <= chunk or Sq % chunk != 0:
+        # unchunked fallback (also for non-divisible lengths, e.g. whisper's
+        # 1500-frame encoder)
+        return _attn_block(q, k, v, qpos0, kpos, causal, window, softcap)
+    n = Sq // chunk
+    qs = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def one(i, qc):
+        qpos = qpos0.reshape(n, chunk)[i]
+        return _attn_block(qc, k, v, qpos, kpos, causal, window, softcap)
+
+    out = jax.lax.map(lambda args: one(*args), (jnp.arange(n), qs))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+def gqa_init(key, cfg, d, dtype):
+    ks = jax.random.split(key, 4)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return dict(
+        wq=dense_init(ks[0], d, H * hd, dtype),
+        wk=dense_init(ks[1], d, KV * hd, dtype),
+        wv=dense_init(ks[2], d, KV * hd, dtype),
+        wo=dense_init(ks[3], H * hd, d, dtype),
+    )
+
+
+def gqa_apply(p, x, cfg, *, causal=True, cache=None, pos=None, xattn_kv=None,
+              acc_init=None):
+    """GQA attention over x.  If ``cache=(k,v)`` is given (decode), append at
+    ``pos`` and attend over the cache.  ``xattn_kv`` replaces self K/V with
+    encoder states (whisper cross-attention).  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(x, p["wq"], cfg=cfg).reshape(B, S, H, hd)
+    if xattn_kv is not None:
+        kx = xattn_kv["k"]
+        vx = xattn_kv["v"]
+        o = attention(q, kx.astype(q.dtype), vx.astype(q.dtype), causal=False,
+                      chunk=cfg.attn_chunk)
+        return dense(o.reshape(B, S, H * hd), p["wo"], cfg=cfg,
+                     acc_init=acc_init), None
+    k = dense(x, p["wk"], cfg=cfg).reshape(B, S, KV, hd)
+    v = dense(x, p["wv"], cfg=cfg).reshape(B, S, KV, hd)
+    if cfg.use_rope:
+        qpos = (jnp.arange(S)[None, :] if pos is None
+                else pos[:, None] + jnp.arange(S)[None, :])
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, qpos, cfg.rope_theta)
+    new_cache = None
+    window = cfg.sliding_window
+    if cache is not None:
+        ck, cv = cache["k"], cache["v"]
+        S_kv = ck.shape[1]
+        if window and window < S_kv:
+            S_kv = window
+        # ring-buffer update for SWA; linear append otherwise
+        slot = (pos % S_kv) if window else pos
+        kq = _maybe_quant_kv(k, cfg)
+        vq = _maybe_quant_kv(v, cfg)
+        ck = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))(
+            ck, kq, slot)
+        cv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))(
+            cv, vq, slot)
+        new_cache = dict(k=ck, v=cv)
+        kf = _maybe_dequant_kv(ck, cfg).astype(q.dtype)
+        vf = _maybe_dequant_kv(cv, cfg).astype(q.dtype)
+        # positions of cache slots (ring for SWA)
+        if window:
+            kpos = (pos[:, None] // S_kv) * S_kv + jnp.arange(S_kv)[None]
+            kpos = jnp.where(jnp.arange(S_kv)[None] <= (pos % S_kv)[:, None],
+                             kpos, kpos - S_kv)
+            valid = kpos >= 0
+            o = _decode_attn(q, kf, vf, kpos, valid, cfg)
+        else:
+            kpos = jnp.broadcast_to(jnp.arange(S_kv)[None], (B, S_kv))
+            valid = kpos <= pos[:, None]
+            o = _decode_attn(q, kf, vf, kpos, valid, cfg)
+    else:
+        o = attention(q, k, v, causal=causal, window=window,
+                      chunk=cfg.attn_chunk, softcap=cfg.logit_softcap)
+    out = dense(o.reshape(B, S, H * hd), p["wo"], cfg=cfg, acc_init=acc_init)
+    return out, new_cache
+
+
+def _decode_attn(q, k, v, kpos, valid, cfg):
+    """Single-query attention against a (possibly ring) cache with per-batch
+    validity mask.  q: (B,1,H,hd), k/v: (B,Skv,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32) * (1.0 / np.sqrt(hd))
+    qg = qf.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    if cfg.logit_softcap:
+        s = jnp.tanh(s / cfg.logit_softcap) * cfg.logit_softcap
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _maybe_quant_kv(x, cfg):
+    if cfg.kv_cache_dtype != "int8":
+        return x.astype(cfg.compute_dtype)
+    # paper pow2-int8 on the KV cache: static exponent -3 covers post-norm
+    # attention K/V ranges; exactness is not required for the cache.
+    return Q.quantize(x.astype(jnp.float32), Q.QSpec(8, True, -3))
+
+
+def _maybe_dequant_kv(x, cfg):
+    if cfg.kv_cache_dtype != "int8":
+        return x
+    return Q.dequantize(x, Q.QSpec(8, True, -3))
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3) — low-rank Q/KV with compressed-latent cache
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, d, dtype):
+    ks = jax.random.split(key, 6)
+    H = cfg.num_heads
+    return dict(
+        wq_a=dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        q_norm=norm_init(cfg, cfg.q_lora_rank),
+        wq_b=dense_init(ks[1], cfg.q_lora_rank,
+                        H * (cfg.qk_nope_dim + cfg.qk_rope_dim), dtype),
+        wkv_a=dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        kv_norm=norm_init(cfg, cfg.kv_lora_rank),
+        wkv_b=dense_init(ks[3], cfg.kv_lora_rank,
+                         H * (cfg.qk_nope_dim + cfg.v_head_dim), dtype),
+        wo=dense_init(ks[4], H * cfg.v_head_dim, d, dtype),
+    )
+
+
+def mla_apply(p, x, cfg, *, cache=None, pos=None, acc_init=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, dc = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                      cfg.kv_lora_rank)
+    q = dense(norm(dense(x, p["wq_a"], cfg=cfg), p["q_norm"], cfg), p["wq_b"],
+              cfg=cfg).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = dense(x, p["wkv_a"], cfg=cfg)
+    ckv, k_rope = kv_a[..., :dc], kv_a[..., dc:]
+    ckv = norm(ckv, p["kv_norm"], cfg)
+    qpos = (jnp.arange(S)[None, :] if pos is None
+            else pos[:, None] + jnp.arange(S)[None, :])
+    q_rope = rope(q_rope, qpos, cfg.rope_theta)
+    k_rope = rope(k_rope[:, :, None, :], qpos, cfg.rope_theta)[:, :, 0]
+
+    wkv_b = getw(p["wkv_b"], x.dtype).reshape(dc, H, dn + dv)
+    wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if cache is None:
+        # prefill/train: expand to per-head K/V (standard form)
+        k_nope = jnp.einsum("bsc,chn->bshn", ckv, wk_b)
+        v = jnp.einsum("bsc,chv->bshv", ckv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = attention(qq, k, v, causal=True, chunk=cfg.attn_chunk)
+        out = dense(o.reshape(B, S, H * dv), p["wo"], cfg=cfg, acc_init=acc_init)
+        return out, None
+    # decode: absorbed attention over the compressed latent cache
+    cc, ckr = cache["ckv"], cache["krope"]
+    S_kv = cc.shape[1]
+    cc = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))(
+        cc, _maybe_quant_kv(ckv, cfg), pos)
+    ckr = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))(
+        ckr, _maybe_quant_kv(k_rope, cfg), pos)
+    new_cache = dict(ckv=cc, krope=ckr)
+    ccf = _maybe_dequant_kv(cc, cfg).astype(jnp.float32)
+    ckrf = _maybe_dequant_kv(ckr, cfg).astype(jnp.float32)
+    # absorb W_k into q:   score = (q_nope W_kb) . c  +  q_rope . k_rope
+    q_abs = jnp.einsum("bshn,chn->bshc", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(dn + dr)
+    s = (jnp.einsum("bshc,btc->bhst", q_abs, ccf)
+         + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), ckrf))
+    s = s * scale
+    valid = jnp.arange(S_kv)[None] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btc->bshc", pr, ccf)
+    o = jnp.einsum("bshc,chv->bshv", o_lat, wv_b.astype(jnp.float32))
+    out = dense(o.reshape(B, S, H * dv).astype(x.dtype), p["wo"], cfg=cfg,
+                acc_init=acc_init)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, d, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("silu", "geglu"):
+        return dict(w_gate=dense_init(ks[0], d, d_ff, dtype),
+                    w_up=dense_init(ks[1], d, d_ff, dtype),
+                    w_down=dense_init(ks[2], d_ff, d, dtype))
+    return dict(w_up=dense_init(ks[0], d, d_ff, dtype),
+                w_down=dense_init(ks[1], d_ff, d, dtype))
+
+
+def mlp_apply(p, x, cfg, acc_init=None):
+    a = act_fn(cfg.mlp_type)
+    if cfg.mlp_type in ("silu", "geglu"):
+        h = a(dense(x, p["w_gate"], cfg=cfg)) * dense(x, p["w_up"], cfg=cfg)
+    else:
+        h = a(dense(x, p["w_up"], cfg=cfg))
+    return dense(h, p["w_down"], cfg=cfg, acc_init=acc_init)
+
+
+# ---------------------------------------------------------------------------
+# MoE — sorted grouped matmul (dropless up to a capacity factor)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg, d, dtype):
+    E, ff = cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = dict(
+        router=dense_init(ks[0], d, E, jnp.float32),
+        w_gate=_init(ks[1], (E, d, ff), dtype),
+        w_up=_init(ks[2], (E, d, ff), dtype),
+        w_down=_init(ks[3], (E, ff, d), dtype),
+    )
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], cfg, d,
+                               cfg.moe_d_ff * cfg.num_shared_experts, dtype)
+    return p
+
+
+def _moe_dense_ref(p, x2d, cfg):
+    """Reference dense-dispatch MoE (every token through every expert,
+    mask-combined).  O(E) flops — tests only."""
+    T, d = x2d.shape
+    E, k = cfg.num_experts, cfg.top_k
+    logits = x2d.astype(jnp.float32) @ getw(p["router"], jnp.float32)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    topg, topi = jax.lax.top_k(gates_full, k)
+    topg = topg / jnp.sum(topg, axis=-1, keepdims=True)
+    a = act_fn(cfg.mlp_type)
+    h = jnp.einsum("td,edf->tef", x2d, getw(p["w_gate"], x2d.dtype))
+    u = jnp.einsum("td,edf->tef", x2d, getw(p["w_up"], x2d.dtype))
+    y_all = jnp.einsum("tef,efd->ted", a(h) * u,
+                       getw(p["w_down"], x2d.dtype))  # (T,E,d)
+    w = jnp.zeros((T, E), x2d.dtype)
+    w = jax.vmap(lambda wr, ir, gr: wr.at[ir].add(gr.astype(wr.dtype)))(w, topi, topg)
+    return jnp.einsum("te,ted->td", w, y_all)
+
+
+def moe_apply(p, x, cfg, acc_init=None):
+    """Sorted grouped-matmul MoE (DESIGN.md: sort tokens by expert, scan the
+    expert list with a static per-expert capacity slice — flop-proportional to
+    actual routed tokens up to the capacity factor)."""
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    if cfg.moe_impl == "dense":
+        y = _moe_dense_ref(p, x2d, cfg)
+    else:
+        logits = x2d.astype(jnp.float32) @ getw(p["router"], jnp.float32)
+        gates_full = jax.nn.softmax(logits, axis=-1)
+        topg, topi = jax.lax.top_k(gates_full, k)   # (T,k)
+        topg = topg / jnp.sum(topg, axis=-1, keepdims=True)
+        flat_e = topi.reshape(-1)                    # (T*k,)
+        order = jnp.argsort(flat_e)
+        tok = order // k
+        cap = int(np.ceil(T * k / E * cfg.moe_capacity_factor))
+        cap = max(8, min(cap, T * k))
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        xs = jnp.take(x2d, tok, axis=0)
+        xs = jnp.pad(xs, ((0, cap), (0, 0)))
+        ys = jnp.zeros((T * k + cap, d), x.dtype)
+        a = act_fn(cfg.mlp_type)
+
+        def step(ys, e):
+            seg = jax.lax.dynamic_slice_in_dim(xs, starts[e], cap, 0)
+            h = a(seg @ getw(slice_expert(p["w_gate"], e), seg.dtype)) * \
+                (seg @ getw(slice_expert(p["w_up"], e), seg.dtype))
+            out = h @ getw(slice_expert(p["w_down"], e), seg.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(ys, out, starts[e], 0), None
+
+        ys, _ = jax.lax.scan(step, ys, jnp.arange(E))
+        ys = ys[:T * k]
+        # tokens beyond an expert's capacity were never written by their own
+        # expert; zero them (standard token dropping).
+        slot_in_e = jnp.arange(T * k) - jnp.take(starts, flat_e[order])
+        ok = slot_in_e < cap
+        ys = jnp.where(ok[:, None], ys, 0)
+        inv = jnp.argsort(order)
+        y_tk = jnp.take(ys, inv, axis=0).reshape(T, k, d)
+        y = jnp.einsum("tk,tkd->td", topg.astype(x.dtype), y_tk)
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(p["shared"], x2d, cfg)
+    y = y.reshape(B, S, d)
+    if acc_init is not None:
+        y = y + acc_init
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba) — chunked selective scan
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg, d, dtype):
+    ks = jax.random.split(key, 7)
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ck = cfg.conv_kernel
+    return dict(
+        in_proj=dense_init(ks[0], d, 2 * di, dtype),
+        conv_w=_init(ks[1], (ck, di), dtype, scale=1.0 / np.sqrt(ck)),
+        conv_b=jnp.zeros((di,), dtype),
+        x_proj=dense_init(ks[2], di, R + 2 * N, dtype),
+        dt_proj=dense_init(ks[3], R, di, dtype),
+        dt_bias=jnp.zeros((di,), jnp.float32),
+        A_log=jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                       (di, N))),
+        D=jnp.ones((di,), jnp.float32),
+        out_proj=dense_init(ks[4], di, d, dtype),
+    )
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B,S,di); w: (K,di) depthwise.  Returns (y, new_state) where state
+    carries the trailing K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return y + b, new_state
+
+
+def selective_scan_chunked(u, dt, A, Bc, Cc, D, h0=None, chunk=256):
+    """Mamba1 selective scan, chunked for bounded memory.
+
+    u, dt: (B,S,di);  A: (di,N);  Bc, Cc: (B,S,N);  h0: (B,di,N) or None.
+    Returns (y: (B,S,di), h_last)."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    nchunk = max(1, S // chunk)
+    if S % chunk:
+        pad = nchunk * chunk + chunk - S
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        nchunk += 1
+    Sp = u.shape[1]
+    uc = u.reshape(B, nchunk, -1, di).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(B, nchunk, -1, di).transpose(1, 0, 2, 3)
+    Bcc = Bc.reshape(B, nchunk, -1, N).transpose(1, 0, 2, 3)
+    Ccc = Cc.reshape(B, nchunk, -1, N).transpose(1, 0, 2, 3)
+    h = jnp.zeros((B, di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        uc, dtc, Bcc, Ccc = xs
+        dtf = dtc.astype(jnp.float32)
+        a = jnp.exp(dtf[..., None] * A)                      # (B,c,di,N)
+        binc = (dtf * uc.astype(jnp.float32))[..., None] * Bcc.astype(jnp.float32)[:, :, None, :]
+        a_cum, b_cum = jax.lax.associative_scan(op, (a, binc), axis=1)
+        hs = a_cum * h[:, None] + b_cum                      # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Ccc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, h, (uc, dtc, Bcc, Ccc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, Sp, di)[:, :S]
+    y = y + D * u[:, :S].astype(jnp.float32)
+    return y, h_last
+
+
+def mamba_apply(p, x, cfg, *, state=None, acc_init=None):
+    """Falcon-Mamba block.  state = dict(ssm, conv) for decode."""
+    B, S, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = dense(x, p["in_proj"], cfg=cfg)
+    xin, z = xz[..., :di], xz[..., di:]
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = dense(xc, p["x_proj"], cfg=cfg)
+    dt_in, Bc, Cc = proj[..., :R], proj[..., R:R + N], proj[..., R + N:]
+    dt = jax.nn.softplus(dense(dt_in, p["dt_proj"], cfg=cfg).astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if state is None:
+        y, h_last = selective_scan_chunked(xc, dt, A, Bc, Cc, p["D"])
+        new_state = None
+    else:
+        h0 = state["ssm"]
+        a = jnp.exp(dt[:, 0, :, None] * A)                   # (B,di,N)
+        binc = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * \
+            Bc[:, 0].astype(jnp.float32)[:, None, :]
+        h = a * h0 + binc
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0].astype(jnp.float32))
+        y = (y + p["D"] * xc[:, 0].astype(jnp.float32))[:, None]
+        new_state = dict(ssm=h, conv=new_conv)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = dense(y, p["out_proj"], cfg=cfg, acc_init=acc_init)
+    if state is None:
+        return out, None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2) — chunked matmul form
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, d, dtype):
+    ks = jax.random.split(key, 5)
+    di, N, hd = cfg.d_inner, cfg.ssm_state, cfg.mamba_headdim
+    nh = di // hd
+    ck = cfg.conv_kernel
+    d_conv = di + 2 * N  # x, B, C all pass through the conv (mamba2 layout)
+    return dict(
+        in_proj=dense_init(ks[0], d, 2 * di + 2 * N + nh, dtype),
+        conv_w=_init(ks[1], (ck, d_conv), dtype, scale=1.0 / np.sqrt(ck)),
+        conv_b=jnp.zeros((d_conv,), dtype),
+        dt_bias=jnp.zeros((nh,), jnp.float32),
+        A_log=jnp.zeros((nh,), jnp.float32),
+        D=jnp.ones((nh,), jnp.float32),
+        norm_scale=jnp.zeros((di,), jnp.float32),
+        out_proj=dense_init(ks[2], di, d, dtype),
+    )
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, h0=None, chunk=128):
+    """SSD (mamba2) in chunked matmul form.
+
+    xh: (B,S,H,P) head inputs; dt: (B,S,H) (post-softplus);
+    A: (H,) negative; Bc, Cc: (B,S,N).  Returns (y, h_last (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    assert S % chunk == 0 or S < chunk, (S, chunk)
+    c = min(chunk, S)
+    nc = S // c
+    xr = xh.reshape(B, nc, c, H, P)
+    dtr = dt.reshape(B, nc, c, H)
+    Br = Bc.reshape(B, nc, c, N)
+    Cr = Cc.reshape(B, nc, c, N)
+    la = dtr * A  # (B,nc,c,H) log decay per step
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def body(h, xs):
+        xr, dtr, Br, Cr, la = xs            # (B,c,...)
+        cum = jnp.cumsum(la, axis=1)        # (B,c,H)
+        # intra-chunk: decay(i,j) = exp(cum_i - cum_j) for i >= j
+        dec = jnp.exp(cum[:, :, None] - cum[:, None, :, :])  # (B,c,c,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cr.astype(jnp.float32),
+                        Br.astype(jnp.float32))
+        scores = cb[..., None] * dec                           # (B,c,c,H)
+        xw = dtr[..., None] * xr.astype(jnp.float32)           # dt-weighted input
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xw)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cr.astype(jnp.float32), h,
+                             jnp.exp(cum))
+        # state update
+        tot = cum[:, -1:, :]                                   # (B,1,H)
+        w = jnp.exp(tot - cum)                                 # (B,c,H)
+        dBx = jnp.einsum("bjn,bjhp,bjh->bhpn", Br.astype(jnp.float32), xw, w)
+        h_new = jnp.exp(tot[:, 0])[:, :, None, None] * h + dBx
+        return h_new, y_intra + y_inter
+
+    h_last, ys = jax.lax.scan(
+        body, h,
+        tuple(t.transpose(1, 0, *range(2, t.ndim)) for t in (xr, dtr, Br, Cr, la)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_last
+
+
+def mamba2_apply(p, x, cfg, *, state=None, acc_init=None):
+    B, S, d = x.shape
+    di, N, hd = cfg.d_inner, cfg.ssm_state, cfg.mamba_headdim
+    nh = di // hd
+    zxbcdt = dense(x, p["in_proj"], cfg=cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt_in = zxbcdt[..., -nh:]
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv1d(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xin = xBC[..., :di].reshape(B, S, nh, hd)
+    Bc = xBC[..., di:di + N]
+    Cc = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if state is None:
+        y, h_last = ssd_chunked(xin, dt, A, Bc, Cc)
+        new_state = None
+    else:
+        h0 = state["ssm"]
+        la = dt[:, 0] * A                                     # (B,H)
+        xw = dt[:, 0, :, None] * xin[:, 0].astype(jnp.float32)
+        dBx = jnp.einsum("bn,bhp->bhpn", Bc[:, 0].astype(jnp.float32), xw)
+        h = jnp.exp(la)[:, :, None, None] * h0 + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0].astype(jnp.float32))[:, None]
+        new_state = dict(ssm=h, conv=new_conv)
+    y = y + p["D"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, S if state is None else 1, di)
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z[:, :y.shape[1]]),
+                p["norm_scale"])
+    out = dense(y, p["out_proj"], cfg=cfg, acc_init=acc_init)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# chunked softmax cross-entropy (never materializes (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(h, emb, labels, chunk=1024, logit_softcap=0.0):
+    """h: (B,S,d), emb: (V,d), labels: (B,S) int32 (-100 = ignore).
+    Returns (sum_nll, count)."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    n = S // c
+    assert S % c == 0, (S, c)
+    hs = h.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        hc, lc = xs
+        logits = jnp.matmul(hc, emb.T.astype(hc.dtype)).astype(jnp.float32)
+        if logit_softcap:
+            logits = jnp.tanh(logits / logit_softcap) * logit_softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = lc >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        s, cnt = carry
+        return (s + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (s, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)), (hs, ls))
+    return s, cnt

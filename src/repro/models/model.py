@@ -1,0 +1,107 @@
+"""Unified model API — dispatch per architecture family.
+
+    init_params(cfg, key)          -> params pytree
+    loss_fn(params, cfg, batch)    -> (loss, metrics)         [train_*]
+    prefill(params, cfg, tokens)   -> last-position logits    [prefill_*]
+    decode_step(params, cfg, tokens, pos, cache) -> (logits, cache) [decode_*]
+    init_cache(cfg, B, S)          -> zeroed decode cache
+    param_count(cfg)               -> #params (via eval_shape, no allocation)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cbase
+from repro.core import quant as Q
+from repro.models import hybrid, ssm, transformer
+
+
+def _mod(cfg):
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        return hybrid
+    return transformer
+
+
+def quantize_int8w(params, min_size=2 ** 20):
+    """Convert big matmul weights to pow2-block int8 storage (paper eq. 1
+    applied per 128-block).  Embedding tables stay raw (gather paths)."""
+    def conv(path, x):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if ("embed" in keys or "norm" in keys or "router" in keys or
+                getattr(x, "ndim", 0) < 2 or x.size < min_size):
+            return x
+        return Q.block_quantize(x.astype(jnp.float32))
+    return jax.tree_util.tree_map_with_path(conv, params)
+
+
+def init_params(cfg, key):
+    p = _mod(cfg).init_params(cfg, key)
+    if cfg.quant == "int8w":
+        p = quantize_int8w(p)
+    return p
+
+
+def loss_fn(params, cfg, batch):
+    return _mod(cfg).loss_fn(params, cfg, batch)
+
+
+def prefill(params, cfg, tokens, extra=None):
+    return _mod(cfg).prefill(params, cfg, tokens, extra)
+
+
+def decode_step(params, cfg, tokens, pos, cache):
+    return _mod(cfg).decode_step(params, cfg, tokens, pos, cache)
+
+
+def init_cache(cfg, B, S):
+    def zeros(shape, dtype, axes):
+        return jnp.zeros(shape, dtype)
+    specs = cbase.cache_specs(cfg, B, S, zeros)
+    return specs
+
+
+def param_shapes(cfg):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+def param_count(cfg) -> int:
+    shapes = param_shapes(cfg)
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(shapes))
+
+
+def param_bytes(cfg) -> int:
+    shapes = param_shapes(cfg)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(shapes))
+
+
+def active_param_count(cfg) -> int:
+    """Per-token active parameters (MoE: top_k of routed experts + shared)."""
+    total = param_count(cfg)
+    if cfg.family != "moe" or not cfg.num_experts:
+        return total
+    n_moe_layers = cfg.num_layers - cfg.first_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = n_moe_layers * cfg.num_experts * per_expert
+    routed_active = n_moe_layers * cfg.top_k * per_expert
+    return total - routed_total + routed_active
+
+
+def model_flops(cfg, shape: cbase.ShapeSpec) -> float:
+    """MODEL_FLOPS per step: 6·N_active·D for training, 2·N_active·D for a
+    forward/decode step (D = tokens processed in the step)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch  # one token per sequence
+    return 2.0 * n * d

@@ -1,0 +1,316 @@
+"""ResNet8 / ResNet20 for CIFAR-10 — the paper's own networks (§IV).
+
+Two execution paths share one parameter set:
+
+* ``forward``      — QAT float path (Brevitas-style): pow2-int8 fake-quant on
+                     weights and activations, BN in float, STE gradients.
+* ``int_forward``  — the integer inference graph the FPGA executes: int8
+                     weights/activations, int16 biases (s_b = s_x + s_w),
+                     int32 accumulators, requantization by bit shift, and the
+                     residual add folded into the next conv's accumulator
+                     (paper Fig. 13).  tests/test_resnet.py asserts the two
+                     paths agree bit-exactly after BN folding + calibration.
+
+The residual-stream handling mirrors core.graph.optimize(): no Add nodes —
+conv1 of each block receives the skip stream as its accumulator init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+from repro.core.quant import QSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str
+    blocks_per_stage: int
+    base_width: int = 16
+    num_classes: int = 10
+    img: int = 32
+    bw_w: int = 8          # weight bits (paper)
+    bw_x: int = 8          # activation bits
+    bw_b: int = 16         # bias bits
+    quant: str = "qat"     # qat | none
+    residual_fusion: bool = True
+
+
+def block_strides(cfg: "ResNetConfig") -> List[int]:
+    out = []
+    for stage in range(3):
+        for bi in range(cfg.blocks_per_stage):
+            out.append(2 if (stage > 0 and bi == 0) else 1)
+    return out
+
+
+RESNET8 = ResNetConfig("resnet8", blocks_per_stage=1)
+RESNET20 = ResNetConfig("resnet20", blocks_per_stage=3)
+
+# static activation exponent grid: inputs in [0,1); post-ReLU activations are
+# unsigned 8-bit with exponent -5 (range [0,8)), pre-add signed -5.
+X_SPEC = QSpec(8, signed=False, exp=-7)      # input images (u8/255 ~ [0,1))
+A_SPEC = QSpec(8, signed=False, exp=-4)      # post-ReLU feature maps
+W_EXP = -7
+
+
+def _conv_init(key, fh, fw, ic, oc):
+    fan_in = fh * fw * ic
+    w = jax.random.normal(key, (fh, fw, ic, oc), jnp.float32)
+    return w * np.sqrt(2.0 / fan_in)
+
+
+def _bn_init(oc):
+    return dict(gamma=jnp.ones((oc,)), beta=jnp.zeros((oc,)),
+                mean=jnp.zeros((oc,)), var=jnp.ones((oc,)))
+
+
+def init_params(cfg: ResNetConfig, key) -> dict:
+    ks = iter(jax.random.split(key, 64))
+    p = dict(stem=dict(w=_conv_init(next(ks), 3, 3, 3, cfg.base_width),
+                       b=jnp.zeros((cfg.base_width,)), bn=_bn_init(cfg.base_width)))
+    blocks = []
+    ich = cfg.base_width
+    for stage in range(3):
+        och = cfg.base_width * (2 ** stage)
+        for bi in range(cfg.blocks_per_stage):
+            stride = 2 if (stage > 0 and bi == 0) else 1
+            blk = dict(
+                conv0=dict(w=_conv_init(next(ks), 3, 3, ich, och),
+                           b=jnp.zeros((och,)), bn=_bn_init(och)),
+                conv1=dict(w=_conv_init(next(ks), 3, 3, och, och),
+                           b=jnp.zeros((och,)), bn=_bn_init(och)),
+            )
+            if stride != 1 or ich != och:
+                blk["ds"] = dict(w=_conv_init(next(ks), 1, 1, ich, och),
+                                 b=jnp.zeros((och,)), bn=_bn_init(och))
+            blocks.append(blk)
+            ich = och
+    p["blocks"] = blocks
+    p["fc"] = dict(w=jax.random.normal(next(ks), (ich, cfg.num_classes)) / np.sqrt(ich),
+                   b=jnp.zeros((cfg.num_classes,)))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# QAT float path
+# ---------------------------------------------------------------------------
+
+
+def _fq_w(w, cfg):
+    if cfg.quant != "qat":
+        return w
+    spec = QSpec(cfg.bw_w, True, W_EXP)
+    return Q.fake_quant(w, spec)
+
+
+def _fq_x(x, cfg, spec=A_SPEC):
+    if cfg.quant != "qat":
+        return x
+    return Q.fake_quant(x, spec)
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _bn(x, bn, train, eps=1e-5):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mu, var = bn["mean"], bn["var"]
+    return (x - mu) * jax.lax.rsqrt(var + eps) * bn["gamma"] + bn["beta"]
+
+
+def forward(params, cfg: ResNetConfig, images, train=False):
+    """images: (B,H,W,3) float in [0,1).  Returns logits (B,10)."""
+    x = _fq_x(images, cfg, X_SPEC)
+    h = _bn(_conv(x, _fq_w(params["stem"]["w"], cfg), params["stem"]["b"]),
+            params["stem"]["bn"], train)
+    h = _fq_x(jax.nn.relu(h), cfg)
+    for blk, stride in zip(params["blocks"], block_strides(cfg)):
+        skip = h
+        y = _bn(_conv(h, _fq_w(blk["conv0"]["w"], cfg), blk["conv0"]["b"],
+                      stride), blk["conv0"]["bn"], train)
+        y = _fq_x(jax.nn.relu(y), cfg)
+        if "ds" in blk:
+            skip = _bn(_conv(h, _fq_w(blk["ds"]["w"], cfg), blk["ds"]["b"],
+                             stride), blk["ds"]["bn"], train)
+            skip = _fq_x(skip, cfg, QSpec(8, True, A_SPEC.exp))
+        # paper add-fold: the skip stream is the accumulator init of conv1
+        z = _conv(y, _fq_w(blk["conv1"]["w"], cfg), blk["conv1"]["b"],
+                  1)
+        z = _bn(z, blk["conv1"]["bn"], train)
+        h = _fq_x(jax.nn.relu(z + skip), cfg)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ _fq_w(params["fc"]["w"], cfg) + params["fc"]["b"]
+
+
+def loss_fn(params, cfg: ResNetConfig, batch, train=True):
+    logits = forward(params, cfg, batch["images"], train=train)
+    labels = batch["labels"]
+    ll = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(ll, labels[:, None], axis=-1))
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, dict(loss=loss, acc=acc)
+
+
+def calibrate_bn(params, cfg: ResNetConfig, images):
+    """Write BN running stats from a calibration batch (paper §III-A: BN is
+    folded into the quantized convs *then calibrated*).  Returns params with
+    bn.mean/bn.var set so the train=False / folded graphs match training."""
+    import copy
+    p = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
+
+    def stats(h):
+        return jnp.mean(h, axis=(0, 1, 2)), jnp.var(h, axis=(0, 1, 2))
+
+    def set_bn(bn, h):
+        mu, var = stats(h)
+        bn["mean"], bn["var"] = mu, var
+
+    x = _fq_x(images, cfg, X_SPEC)
+    pre = _conv(x, _fq_w(p["stem"]["w"], cfg), p["stem"]["b"])
+    set_bn(p["stem"]["bn"], pre)
+    h = _fq_x(jax.nn.relu(_bn(pre, p["stem"]["bn"], False)), cfg)
+    for blk, stride in zip(p["blocks"], block_strides(cfg)):
+        skip = h
+        pre0 = _conv(h, _fq_w(blk["conv0"]["w"], cfg), blk["conv0"]["b"],
+                     stride)
+        set_bn(blk["conv0"]["bn"], pre0)
+        y = _fq_x(jax.nn.relu(_bn(pre0, blk["conv0"]["bn"], False)), cfg)
+        if "ds" in blk:
+            pred = _conv(h, _fq_w(blk["ds"]["w"], cfg), blk["ds"]["b"],
+                         stride)
+            set_bn(blk["ds"]["bn"], pred)
+            skip = _fq_x(_bn(pred, blk["ds"]["bn"], False), cfg,
+                         QSpec(8, True, A_SPEC.exp))
+        pre1 = _conv(y, _fq_w(blk["conv1"]["w"], cfg), blk["conv1"]["b"], 1)
+        set_bn(blk["conv1"]["bn"], pre1)
+        z = _bn(pre1, blk["conv1"]["bn"], False)
+        h = _fq_x(jax.nn.relu(z + skip), cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# BN folding + integer inference graph (the "hardware" path)
+# ---------------------------------------------------------------------------
+
+
+def fold_params(params) -> dict:
+    """Fold BN into conv weights/biases (paper §III-A), drop BN nodes."""
+    def fold(c):
+        w, b = Q.fold_batchnorm(c["w"], c["b"], c["bn"]["gamma"],
+                                c["bn"]["beta"], c["bn"]["mean"],
+                                c["bn"]["var"])
+        return dict(w=w, b=b)
+
+    out = dict(stem=fold(params["stem"]), fc=dict(params["fc"]), blocks=[])
+    for blk in params["blocks"]:
+        fb = dict(conv0=fold(blk["conv0"]), conv1=fold(blk["conv1"]))
+        if "ds" in blk:
+            fb["ds"] = fold(blk["ds"])
+        out["blocks"].append(fb)
+    return out
+
+
+def quantize_params(folded, cfg: ResNetConfig) -> dict:
+    """Float folded params -> integer weights/biases per the paper's spec:
+    int8 weights (pow2 scale), int16 biases at s_b = s_x + s_w.
+
+    Weight exponents are calibrated PER CONV on the folded weights — BN
+    folding rescales weights by gamma/sqrt(var), which can push them far
+    outside a fixed 2^-7 grid (paper §III-A calibrates after folding)."""
+    def qc(c, x_spec):
+        w_exp = Q.calibrate_exp(c["w"], QSpec(cfg.bw_w, True, 0))
+        w_spec = QSpec(cfg.bw_w, True, w_exp)
+        b_spec = Q.bias_spec(x_spec, w_spec, cfg.bw_b)
+        return dict(wq=Q.quantize(c["w"], w_spec),
+                    bq=Q.quantize(c["b"], b_spec),
+                    w_spec=w_spec, x_spec=x_spec, b_spec=b_spec)
+
+    out = dict(stem=qc(folded["stem"], X_SPEC), blocks=[])
+    for blk in folded["blocks"]:
+        qb = dict(conv0=qc(blk["conv0"], A_SPEC), conv1=qc(blk["conv1"], A_SPEC))
+        if "ds" in blk:
+            qb["ds"] = qc(blk["ds"], A_SPEC)
+        out["blocks"].append(qb)
+    fc_exp = Q.calibrate_exp(folded["fc"]["w"], QSpec(cfg.bw_w, True, 0))
+    fc_spec = QSpec(cfg.bw_w, True, fc_exp)
+    out["fc"] = dict(wq=Q.quantize(folded["fc"]["w"], fc_spec),
+                     b=folded["fc"]["b"], w_spec=fc_spec)
+    return out
+
+
+def _int_conv(xq, qc, stride=1, acc_init=None):
+    """int8 activations x int8 weights -> int32 accumulator (+ bias, + folded
+    skip stream), exactly as the DSP pipeline computes it."""
+    acc = jax.lax.conv_general_dilated(
+        xq.astype(jnp.int32), qc["wq"].astype(jnp.int32),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    acc = acc + qc["bq"].astype(jnp.int32)
+    if acc_init is not None:
+        acc = acc + acc_init
+    return acc
+
+
+def _relu_requant(acc, qc, out_spec=A_SPEC):
+    acc = jnp.maximum(acc, 0)
+    from_exp = qc["x_spec"].exp + qc["w_spec"].exp
+    return Q.requantize_shift(acc, from_exp, out_spec)
+
+
+def _requant(acc, qc, out_spec):
+    from_exp = qc["x_spec"].exp + qc["w_spec"].exp
+    return Q.requantize_shift(acc, from_exp, out_spec)
+
+
+def int_forward(qparams, cfg: ResNetConfig, images):
+    """Pure-integer inference (float ops only at the final classifier).
+
+    The residual add never exists as a node: the skip stream (requantized to
+    the product domain of conv1) initializes conv1's int32 accumulator."""
+    xq = Q.quantize(images, X_SPEC)  # uint8 feature map
+    acc = _int_conv(xq, qparams["stem"])
+    h = _relu_requant(acc, qparams["stem"])
+    for qb, stride in zip(qparams["blocks"], block_strides(cfg)):
+        acc0 = _int_conv(h, qb["conv0"], stride)
+        y = _relu_requant(acc0, qb["conv0"])
+        if "ds" in qb:
+            accd = _int_conv(h, qb["ds"], stride)
+            # align the ds product domain to conv1's product domain (shift)
+            eds = qb["ds"]["x_spec"].exp + qb["ds"]["w_spec"].exp
+            e1 = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
+            sh = eds - e1
+            if sh >= 0:
+                skip_q = accd << sh
+            else:
+                half = jnp.int32(1) << (-sh - 1)
+                skip_q = (accd + half) >> (-sh)
+        else:
+            # re-quantize the skip stream into conv1's product domain so it
+            # can initialize the accumulator (pure shift, either direction)
+            skip_exp = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
+            sh = A_SPEC.exp - skip_exp
+            if sh >= 0:
+                skip_q = h.astype(jnp.int32) << sh
+            else:
+                half = jnp.int32(1) << (-sh - 1)
+                skip_q = (h.astype(jnp.int32) + half) >> (-sh)
+        acc1 = _int_conv(y, qb["conv1"], 1, acc_init=skip_q)
+        h = _relu_requant(acc1, qb["conv1"])
+    hf = Q.dequantize(h, A_SPEC)
+    pooled = jnp.mean(hf, axis=(1, 2))
+    wf = Q.dequantize(qparams["fc"]["wq"], qparams["fc"]["w_spec"])
+    return pooled @ wf + qparams["fc"]["b"]

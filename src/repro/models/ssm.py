@@ -1,0 +1,81 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel import ctx
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    d, V = cfg.d_model, cfg.vocab_size
+
+    def blk(k):
+        kk = jax.random.split(k, 2)
+        return dict(ln=L.norm_init(cfg, d),
+                    mamba=L.mamba_init(kk[0], cfg, d, cfg.pdtype))
+
+    return dict(
+        embed=L._init(ks[0], (V, d), cfg.pdtype, scale=1.0),
+        blocks=jax.vmap(blk)(jax.random.split(ks[1], cfg.num_layers)),
+        final_norm=L.norm_init(cfg, d),
+        unembed=L.dense_init(ks[2], d, V, cfg.pdtype),
+    )
+
+
+def _block(p, h, cfg, state=None):
+    skip = h
+    m, new_state = L.mamba_apply(
+        p["mamba"], L.norm(h, p["ln"], cfg), cfg, state=state,
+        acc_init=skip if cfg.residual_fusion else None)
+    h = m if cfg.residual_fusion else h + m
+    return h, new_state
+
+
+def hidden_states(params, cfg, tokens, extra=None):
+    h = ctx.sharded_take(params["embed"], tokens).astype(cfg.compute_dtype)
+
+    def body(h, p):
+        h = ctx.constrain(h, ctx.batch_axes(), None, None)
+        hn, _ = _block(p, h, cfg)
+        return hn, None
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body,
+            policy=(jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat_policy == "dots" else None))
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    return L.norm(h, params["final_norm"], cfg)
+
+
+def loss_fn(params, cfg, batch):
+    h = hidden_states(params, cfg, batch["tokens"])
+    emb = ctx.constrain(params["unembed"].T.astype(cfg.compute_dtype),
+                        "model", None)
+    s, cnt = L.chunked_xent(h, emb, batch["labels"], cfg.loss_chunk)
+    loss = s / jnp.maximum(cnt, 1)
+    return loss, dict(loss=loss, tokens=cnt)
+
+
+def prefill(params, cfg, tokens, extra=None):
+    h = hidden_states(params, cfg, tokens, extra)
+    return jnp.matmul(h[:, -1:], params["unembed"].astype(h.dtype))
+
+
+def decode_step(params, cfg, tokens, pos, cache):
+    h = ctx.sharded_take(params["embed"], tokens).astype(cfg.compute_dtype)
+
+    def body(h, xs):
+        p, ssm, conv = xs
+        hn, ns = _block(p, h, cfg, state=dict(ssm=ssm, conv=conv))
+        return hn, (ns["ssm"], ns["conv"])
+
+    h, (ssm, conv) = jax.lax.scan(
+        body, h, (params["blocks"], cache["ssm_state"], cache["conv_state"]))
+    h = L.norm(h, params["final_norm"], cfg)
+    logits = jnp.matmul(h, params["unembed"].astype(h.dtype))
+    return logits, dict(ssm_state=ssm, conv_state=conv)

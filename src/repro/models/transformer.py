@@ -1,0 +1,299 @@
+"""Decoder-only / encoder-decoder transformer LMs (dense, MoE, VLM, audio).
+
+Layers are stacked with ``jax.lax.scan`` over a (L, ...) parameter stack so the
+HLO stays small for 96-layer models, with per-layer remat.  The residual
+stream uses the paper's add-fold: the block output matmul receives the skip
+stream as its accumulator initializer (``acc_init``) instead of a separate Add
+node (cfg.residual_fusion; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel import ctx
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _block_init(cfg: ModelConfig, d, use_moe: bool, cross_attn: bool = False):
+    def init(key):
+        ks = jax.random.split(key, 6)
+        p = dict(ln1=L.norm_init(cfg, d))
+        if cfg.attn_type == "mla":
+            p["attn"] = L.mla_init(ks[0], cfg, d, cfg.pdtype)
+        else:
+            p["attn"] = L.gqa_init(ks[0], cfg, d, cfg.pdtype)
+        if cross_attn:
+            p["ln_x"] = L.norm_init(cfg, d)
+            p["xattn"] = L.gqa_init(ks[1], cfg, d, cfg.pdtype)
+        p["ln2"] = L.norm_init(cfg, d)
+        if use_moe:
+            p["moe"] = L.moe_init(ks[2], cfg, d, cfg.pdtype)
+        else:
+            p["mlp"] = L.mlp_init(ks[3], cfg, d, cfg.d_ff, cfg.pdtype)
+        return p
+    return init
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    p = dict(
+        embed=L._init(ks[0], (V, d), cfg.pdtype, scale=1.0),
+        final_norm=L.norm_init(cfg, d),
+    )
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[1], d, V, cfg.pdtype)
+    n_moe = 0
+    if cfg.family == "moe":
+        n_moe = cfg.num_layers - cfg.first_dense_layers
+        n_dense = cfg.first_dense_layers
+    else:
+        n_dense = cfg.num_layers
+    if n_dense:
+        p["blocks"] = _stack_init(_block_init(cfg, d, use_moe=False), ks[2], n_dense)
+    if n_moe:
+        p["moe_blocks"] = _stack_init(_block_init(cfg, d, use_moe=True), ks[3], n_moe)
+    if cfg.family == "audio":
+        p["enc_blocks"] = _stack_init(
+            _block_init(cfg, d, use_moe=False), ks[4], cfg.encoder_layers)
+        p["enc_norm"] = L.norm_init(cfg, d)
+        p["enc_pos"] = L._init(ks[5], (cfg.encoder_len, d), cfg.pdtype, scale=0.02)
+        p["dec_pos"] = L._init(ks[6], (32_768, d), cfg.pdtype, scale=0.02)
+        # decoder blocks get cross-attention
+        p["blocks"] = _stack_init(
+            _block_init(cfg, d, use_moe=False, cross_attn=True), ks[2],
+            cfg.num_layers)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L.dense_init(ks[4], d, d, cfg.pdtype)
+    if cfg.mtp_depth:
+        p["mtp"] = _stack_init(_block_init(cfg, d, use_moe=False), ks[7],
+                               cfg.mtp_depth)
+        p["mtp_norm"] = L.norm_init(cfg, d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, h, cfg, *, use_moe, causal=True, cache=None, pos=None,
+                 enc_out=None, xattn_cache=None):
+    """One pre-norm block with add-fold residuals.  Returns (h, new_cache)."""
+    fuse = cfg.residual_fusion
+    skip = h
+    if cfg.attn_type == "mla":
+        a, new_kv = L.mla_apply(p["attn"], L.norm(h, p["ln1"], cfg), cfg,
+                                cache=cache, pos=pos,
+                                acc_init=skip if fuse else None)
+    else:
+        a, new_kv = L.gqa_apply(p["attn"], L.norm(h, p["ln1"], cfg), cfg,
+                                causal=causal, cache=cache, pos=pos,
+                                acc_init=skip if fuse else None)
+    h = a if fuse else h + a
+    if enc_out is not None or xattn_cache is not None:
+        skip = h
+        kv = xattn_cache
+        if kv is None:
+            B = enc_out.shape[0]
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            kv = dict(
+                k=L.dense(enc_out, p["xattn"]["wk"], cfg=cfg).reshape(
+                    B, -1, KV, hd),
+                v=L.dense(enc_out, p["xattn"]["wv"], cfg=cfg).reshape(
+                    B, -1, KV, hd),
+            )
+        x, _ = L.gqa_apply(p["xattn"], L.norm(h, p["ln_x"], cfg), cfg,
+                           xattn_kv=kv, acc_init=skip if fuse else None)
+        h = x if fuse else h + x
+    skip = h
+    hn = L.norm(h, p["ln2"], cfg)
+    if use_moe:
+        m = L.moe_apply(p["moe"], hn, cfg, acc_init=skip if fuse else None)
+    else:
+        m = L.mlp_apply(p["mlp"], hn, cfg, acc_init=skip if fuse else None)
+    h = m if fuse else h + m
+    return h, new_kv
+
+
+def _scan_blocks(stack, h, cfg, *, use_moe, causal=True, cache=None, pos=None,
+                 enc_out=None, xattn_cache=None):
+    """Scan a stacked block over the layer axis (remat per layer)."""
+    def body(h, xs):
+        p, kv, xkv = xs
+        # pin the residual stream: batch over (pod,data), d replicated —
+        # prevents involuntary batch all-gathers inside the layer scan.
+        # seq_shard (Megatron-SP) additionally shards the sequence dim over
+        # 'model' between blocks: 16x less resident activation memory for
+        # one (tokens x d) all-gather per block boundary.
+        h = ctx.constrain(h, ctx.batch_axes(),
+                          "model" if cfg.seq_shard else None, None)
+        hn, new_kv = _apply_block(p, h, cfg, use_moe=use_moe, causal=causal,
+                                  cache=kv, pos=pos, enc_out=enc_out,
+                                  xattn_cache=xkv)
+        return hn, new_kv
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body,
+            policy=(jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                    if cfg.remat_policy == "dots" else None))
+    n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+    xs = (stack, cache,
+          None if xattn_cache is None else xattn_cache)
+    if cache is None and xattn_cache is None:
+        xs = (stack, None, None)
+        # scan requires every xs leaf to have a leading L axis; use a dummy
+        h, kvs = jax.lax.scan(
+            lambda hh, pp: body(hh, (pp, None, None)), h, stack)
+        return h, kvs
+    h, kvs = jax.lax.scan(lambda hh, xx: body(hh, xx), h, xs)
+    return h, kvs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens):
+    h = ctx.sharded_take(params["embed"], tokens).astype(cfg.compute_dtype)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), cfg.compute_dtype)
+    return h
+
+
+def _encode(params, cfg, frames):
+    """Whisper encoder over stub frame embeddings (conv frontend is a stub)."""
+    h = frames.astype(cfg.compute_dtype) + params["enc_pos"][None, :frames.shape[1]]
+    h, _ = _scan_blocks(params["enc_blocks"], h, cfg, use_moe=False,
+                        causal=False)
+    return L.norm(h, params["enc_norm"], cfg)
+
+
+def hidden_states(params, cfg: ModelConfig, tokens, extra=None):
+    """Token embeddings -> final hidden states (train/prefill path)."""
+    extra = extra or {}
+    h = _embed(params, cfg, tokens)
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _encode(params, cfg, extra["frames"])
+        h = h + params["dec_pos"][None, :h.shape[1]].astype(h.dtype)
+    if cfg.family == "vlm":
+        patches = L.dense(extra["patches"].astype(cfg.compute_dtype),
+                          params["patch_proj"], cfg=cfg)
+        # stub frontend: patch embeddings replace the first P token slots so
+        # the cell's (B, S) shape is preserved exactly
+        h = jnp.concatenate([patches, h[:, patches.shape[1]:]], axis=1)
+    if cfg.family == "moe":
+        if cfg.first_dense_layers:
+            h, _ = _scan_blocks(params["blocks"], h, cfg, use_moe=False)
+        h, _ = _scan_blocks(params["moe_blocks"], h, cfg, use_moe=True)
+    else:
+        h, _ = _scan_blocks(params["blocks"], h, cfg, use_moe=False,
+                            enc_out=enc_out)
+    return L.norm(h, params["final_norm"], cfg)
+
+
+def unembed_weight(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["unembed"].T
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross entropy (chunked over sequence)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    extra = {k: v for k, v in batch.items() if k in ("frames", "patches")}
+    h = hidden_states(params, cfg, tokens, extra)
+    emb = unembed_weight(params, cfg).astype(cfg.compute_dtype)
+    # vocab-sharded view for the logits matmul (param is stored d-sharded)
+    emb = ctx.constrain(emb, "model", None)
+    s, cnt = L.chunked_xent(h, emb, labels, cfg.loss_chunk, cfg.logit_softcap)
+    loss = s / jnp.maximum(cnt, 1)
+    if cfg.mtp_depth:
+        # deepseek MTP: one extra depth predicting t+2 from the trunk states
+        hm = h
+        for i in range(cfg.mtp_depth):
+            blk = jax.tree_util.tree_map(lambda x: x[i], params["mtp"])
+            hm, _ = _apply_block(blk, hm, cfg, use_moe=False)
+        hm = L.norm(hm, params["mtp_norm"], cfg)
+        lab2 = jnp.concatenate(
+            [labels[:, 1:], -jnp.ones_like(labels[:, :1])], axis=1)
+        s2, c2 = L.chunked_xent(hm, emb, lab2, cfg.loss_chunk,
+                                cfg.logit_softcap)
+        loss = loss + 0.3 * s2 / jnp.maximum(c2, 1)
+    return loss, dict(loss=loss, tokens=cnt)
+
+
+def prefill(params, cfg: ModelConfig, tokens, extra=None):
+    """Prefill forward: final hidden states + last-position logits."""
+    h = hidden_states(params, cfg, tokens, extra)
+    emb = unembed_weight(params, cfg).astype(cfg.compute_dtype)
+    emb = ctx.constrain(emb, "model", None)
+    logits = jnp.matmul(h[:, -1:], emb.T.astype(h.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, cache):
+    """tokens (B,1), pos (B,), cache per configs.base.cache_specs.
+    Returns (logits (B,1,V), new_cache)."""
+    h = _embed(params, cfg, tokens)
+    if cfg.family == "audio":
+        h = h + jax.vmap(lambda p: params["dec_pos"][p])(pos)[:, None].astype(h.dtype)
+
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        new_cache = dict(cache)
+        if cfg.attn_type == "mla":
+            per_layer = lambda c, sl: {k: c[k][sl] for k in ("ckv", "krope")}
+            keys = ("ckv", "krope")
+        else:
+            per_layer = lambda c, sl: {k: c[k][sl] for k in ("k", "v")}
+            keys = ("k", "v")
+        dense_cache = per_layer(cache, slice(0, nd)) if nd else None
+        moe_cache = per_layer(cache, slice(nd, cfg.num_layers))
+        if nd:
+            h, kv_d = _scan_blocks(params["blocks"], h, cfg, use_moe=False,
+                                   cache=dense_cache, pos=pos)
+        h, kv_m = _scan_blocks(params["moe_blocks"], h, cfg, use_moe=True,
+                               cache=moe_cache, pos=pos)
+        for k in keys:
+            parts = ([kv_d[k]] if nd else []) + [kv_m[k]]
+            new_cache[k] = jnp.concatenate(parts, axis=0)
+    else:
+        xattn_cache = None
+        if cfg.family == "audio":
+            xattn_cache = dict(
+                k=cache["xk"].astype(cfg.compute_dtype),
+                v=cache["xv"].astype(cfg.compute_dtype))
+        layer_cache = {k: v for k, v in cache.items()
+                       if k in ("k", "v", "ckv", "krope")}
+        h, kvs = _scan_blocks(
+            params["blocks"], h, cfg, use_moe=False, cache=layer_cache,
+            pos=pos,
+            xattn_cache=xattn_cache)
+        new_cache = dict(cache)
+        new_cache.update(kvs)
+    h = L.norm(h, params["final_norm"], cfg)
+    emb = unembed_weight(params, cfg).astype(cfg.compute_dtype)
+    emb = ctx.constrain(emb, "model", None)
+    logits = jnp.matmul(h, emb.T.astype(h.dtype))
+    return logits, new_cache

@@ -1,0 +1,122 @@
+"""Sharding rules: FSDP('data') x TP('model') (+ 'pod' data parallelism).
+
+Every parameter gets a PartitionSpec by shape heuristics with divisibility
+checks (a dim is only sharded if divisible by the axis size); optimizer state
+inherits the parameter's spec (ZeRO-3 comes for free under pjit).  Activations
+are sharded batch-over-('pod','data') via the input specs; intermediate
+shardings propagate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def param_spec(path: str, shape, mesh: Mesh, *, fsdp_axis="data",
+               tp_axis="model", min_size_fsdp: int = 2 ** 18) -> P:
+    """Choose a spec for one parameter.
+
+    Policy (matmul weights are ~2D (in, out), possibly with leading stack/
+    expert dims):
+      * last dim  -> TP axis   (column parallel) when divisible
+      * second-to-last dim -> FSDP axis when divisible and tensor is large
+      * leading scan/expert dims stay unsharded (scan slices them)
+    Embeddings shard vocab over TP.  Norms/bias/small tensors replicate.
+    """
+    ndim = len(shape)
+    tp = axis_size(mesh, tp_axis)
+    fsdp = axis_size(mesh, fsdp_axis)
+    size = int(np.prod(shape))
+    spec = [None] * ndim
+    if ndim == 0 or size < 2 ** 14:
+        return P(*spec)
+    if "embed" in path and ndim == 2:
+        # (V, d): shard d over TP so the token gather (and its scatter-add
+        # gradient) stays device-local; the logits matmul re-constrains a
+        # vocab-sharded view (models/transformer.loss paths).  Sharding the
+        # gather's vocab dim makes XLA SPMD replicate the table (observed:
+        # "Involuntary full rematerialization" warnings + GB-scale gathers).
+        if shape[1] % tp == 0:
+            spec[1] = tp_axis
+        return P(*spec)
+    if ndim >= 2:
+        if shape[-1] % tp == 0:
+            spec[-1] = tp_axis
+        if size >= min_size_fsdp and shape[-2] % fsdp == 0:
+            spec[-2] = fsdp_axis
+        elif shape[-1] % (tp * fsdp) == 0 and spec[-1] is not None and \
+                size >= min_size_fsdp:
+            spec[-1] = (fsdp_axis, tp_axis)
+        return P(*spec)
+    # 1D big vectors (e.g. stacked biases): replicate
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def params_shardings(param_tree, mesh: Mesh, **kw):
+    """Map a pytree of arrays/ShapeDtypeStructs to NamedShardings."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, **kw)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+# logical input axes -> mesh axes
+def input_sharding_factory(mesh: Mesh):
+    """Returns sharding(axes_tuple) for configs.base.input_specs.
+
+    'batch' -> ('pod','data') when batch divisible, else unsharded (the seq
+    dim takes 'data' for batch-1 long-context cells); 'heads'/'embed' ->
+    'model' when divisible."""
+    names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+
+    def sharding(shape, axes):
+        spec = []
+        used_data = False
+        for dim, ax in zip(shape, axes):
+            if ax == "batch":
+                n = axis_size(mesh, batch_axes)
+                if dim % n == 0:
+                    spec.append(batch_axes if len(batch_axes) > 1
+                                else batch_axes[0])
+                    used_data = True
+                else:
+                    spec.append(None)
+            elif ax == "seq":
+                if not used_data and dim % axis_size(mesh, batch_axes) == 0:
+                    # sequence sharding fallback (batch-1 long-context cells)
+                    spec.append(batch_axes if len(batch_axes) > 1
+                                else batch_axes[0])
+                    used_data = True
+                else:
+                    spec.append(None)
+            elif ax in ("heads", "embed"):
+                spec.append("model" if dim % mesh.shape["model"] == 0
+                            else None)
+            else:
+                spec.append(None)
+        return NamedSharding(mesh, P(*spec))
+
+    return sharding

@@ -1,0 +1,116 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md §5):
+  * periodic async checkpoints (atomic; retention);
+  * auto-resume from the latest checkpoint, including the data-pipeline
+    state, so restarts are bitwise reproducible;
+  * SIGTERM/SIGINT -> checkpoint-now then clean exit (preemption handling);
+  * step watchdog: a step exceeding ``watchdog_s`` is logged as a straggler
+    / hang and (optionally) aborts so the scheduler can restart the job —
+    on multi-pod SPMD a hung peer manifests exactly this way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    watchdog_s: float = 0.0          # 0 = disabled
+    abort_on_hang: bool = False
+    log_every: int = 10
+
+
+class Watchdog:
+    def __init__(self, limit_s: float, abort: bool, log):
+        self.limit_s, self.abort, self.log = limit_s, abort, log
+        self._timer = None
+        self.fired = 0
+
+    def _fire(self):
+        self.fired += 1
+        self.log(f"[watchdog] step exceeded {self.limit_s}s — straggler or "
+                 f"hung collective; {'aborting' if self.abort else 'noting'}")
+        if self.abort:
+            import os
+            os._exit(42)  # let the scheduler restart from the last checkpoint
+
+    def arm(self):
+        if self.limit_s <= 0:
+            return
+        self.disarm()
+        self._timer = threading.Timer(self.limit_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def disarm(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+
+def run(loop_cfg: LoopConfig, *, params, opt_state, train_step: Callable,
+        pipeline, shardings=None, log: Callable = print):
+    """Generic loop: train_step(params, opt_state, step, batch)."""
+    start_step = 0
+    if loop_cfg.ckpt_dir and ckpt_lib.latest_steps(loop_cfg.ckpt_dir):
+        (params, opt_state), start_step, extra = ckpt_lib.restore(
+            loop_cfg.ckpt_dir, (params, opt_state), shardings=shardings)
+        if "pipeline" in extra:
+            pipeline.state = type(pipeline.state).from_dict(extra["pipeline"])
+        log(f"[resume] restored step {start_step}")
+        start_step += 1
+
+    stop = {"now": False}
+
+    def _sig(_signum, _frame):
+        log("[signal] preemption — checkpointing and exiting")
+        stop["now"] = True
+
+    prev_int = signal.signal(signal.SIGINT, _sig)
+    prev_term = signal.signal(signal.SIGTERM, _sig)
+    wd = Watchdog(loop_cfg.watchdog_s, loop_cfg.abort_on_hang, log)
+    metrics = {}
+    step = start_step
+    try:
+        t_loop = time.time()
+        for step in range(start_step, loop_cfg.total_steps):
+            batch = pipeline.next()
+            wd.arm()
+            params, opt_state, metrics = train_step(params, opt_state, step,
+                                                    batch)
+            jax.block_until_ready(metrics)
+            wd.disarm()
+            if step % loop_cfg.log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                log(f"[step {step}] {m} ({time.time()-t_loop:.1f}s)")
+            if (loop_cfg.ckpt_dir and loop_cfg.ckpt_every and
+                    (step + 1) % loop_cfg.ckpt_every == 0):
+                ckpt_lib.save_async(
+                    loop_cfg.ckpt_dir, step, (params, opt_state),
+                    extra=dict(pipeline=pipeline.state.to_dict()),
+                    keep=loop_cfg.keep)
+            if stop["now"]:
+                break
+    finally:
+        wd.disarm()
+        signal.signal(signal.SIGINT, prev_int)
+        signal.signal(signal.SIGTERM, prev_term)
+    if loop_cfg.ckpt_dir:
+        ckpt_lib.save(loop_cfg.ckpt_dir, step, (params, opt_state),
+                      extra=dict(pipeline=pipeline.state.to_dict()),
+                      keep=loop_cfg.keep)
+        ckpt_lib.wait_pending()
+    return params, opt_state, metrics

@@ -1,0 +1,123 @@
+"""Optimizers (no external deps).
+
+* ``sgdm``  — SGD + momentum + cosine annealing (the paper's training recipe).
+* ``adamw`` — AdamW with optional **int8 pow2-block-quantized moments**
+  (core.quant.block_quantize): the paper's quantization scheme applied to
+  optimizer state, which is what lets the 340B/671B cells fit the pod
+  (DESIGN.md §5).  Moments are dequantized, updated, requantized each step —
+  error feedback is implicit in the pow2 grid (quantization of m/v, not of
+  the update).
+
+API: opt = make(name, **hp); state = opt.init(params);
+     params, state = opt.update(grads, state, params, step)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def cosine_lr(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup, 1))
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return lr
+
+
+def sgdm(lr=0.1, momentum=0.9, weight_decay=1e-4, total_steps=1000,
+         warmup=0):
+    sched = cosine_lr(lr, total_steps, warmup)
+
+    def init(params):
+        return dict(mu=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+
+        def upd(g, m, p):
+            g = g + weight_decay * p
+            m = momentum * m + g
+            return p - lr_t * m, m
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, dict(mu=new_m)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          total_steps=10_000, warmup=200, int8_state=False,
+          state_block=128):
+    sched = cosine_lr(lr, total_steps, warmup)
+
+    def _q(x):
+        if not int8_state or x.size < state_block:
+            return x
+        return Q.block_quantize(x.astype(jnp.float32), block=state_block)
+
+    def _dq(x):
+        if isinstance(x, Q.BlockQuantized):
+            return Q.block_dequantize(x, block=state_block)
+        return x
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: _q(jnp.zeros(p.shape, jnp.float32)), params)
+        zeros2 = jax.tree_util.tree_map(
+            lambda p: _q(jnp.zeros(p.shape, jnp.float32)), params)
+        return dict(m=zeros, v=zeros2)
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        c1 = 1 - b1 ** (jnp.asarray(step, jnp.float32) + 1)
+        c2 = 1 - b2 ** (jnp.asarray(step, jnp.float32) + 1)
+        is_q = lambda t: isinstance(t, Q.BlockQuantized)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * _dq(m) + (1 - b1) * gf
+            vf = b2 * _dq(v) + (1 - b2) * gf * gf
+            u = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return newp, _q(mf), _q(vf)
+
+        flat_g, tree = jax.tree_util.tree_flatten(grads)
+        flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_q)[0]
+        flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_q)[0]
+        flat_p = jax.tree_util.tree_flatten(params)[0]
+        outs = [upd(g, m, v, p) for g, m, v, p
+                in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in outs])
+        new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in outs])
+        return new_p, dict(m=new_m, v=new_v)
+
+    return Optimizer(init, update)
+
+
+def make(name: str, **hp) -> Optimizer:
+    if name == "sgdm":
+        return sgdm(**hp)
+    if name == "adamw":
+        return adamw(**hp)
+    raise ValueError(name)

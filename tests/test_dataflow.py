@@ -1,0 +1,64 @@
+"""Dataflow buffer model + analytic roofline sanity (hypothesis sweeps)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import base as cb
+from repro.core import dataflow as df
+from repro.launch.analytic import Cell, analytic_terms
+
+
+@given(st.integers(4, 64), st.integers(1, 64), st.sampled_from([1, 3, 5]),
+       st.sampled_from([1, 3, 5]))
+@settings(max_examples=40, deadline=None)
+def test_window_buffer_invariants(iw, ich, fh, fw):
+    b1 = df.window_buffer_size(iw, ich, fh, fw, ow_par=1)
+    b2 = df.window_buffer_size(iw, ich, fh, fw, ow_par=2)
+    assert b2 - b1 == ich                       # eq.17 vs eq.16: +1 column
+    assert sum(df.fifo_partition(iw, ich, fh, fw)) == b1
+
+
+@given(st.integers(8, 64), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_skip_ratio_half_when_iw_ich_conserved(iw, ich):
+    """eq. 23: R_sc ~ 0.5 whenever iw*ich is conserved across the block
+    (true for every ResNet8/20 block)."""
+    r = df.skip_buffer_ratio(iw, ich, 3, 3, iw, ich, 3, 3)
+    assert 0.4 < r < 0.6
+    r2 = df.skip_buffer_ratio(iw, ich, 3, 3, iw // 2, ich * 2, 3, 3)
+    assert 0.4 < r2 < 0.6
+
+
+def test_hbm_model_monotone_in_fusion():
+    for ds in (False, True):
+        f = df.residual_block_hbm_bytes(32, 32, 16, 32, fused=True,
+                                        downsample=ds, stride=2 if ds else 1)
+        u = df.residual_block_hbm_bytes(32, 32, 16, 32, fused=False,
+                                        downsample=ds, stride=2 if ds else 1)
+        assert u > 2 * f
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("gemma-2b", "train_4k"), ("mixtral-8x22b", "decode_32k"),
+    ("falcon-mamba-7b", "long_500k"), ("deepseek-v3-671b", "prefill_32k"),
+    ("zamba2-7b", "train_4k"), ("whisper-large-v3", "prefill_32k"),
+])
+def test_analytic_terms_positive_and_sane(arch, shape):
+    cfg = cb.get_config(arch)
+    cell = Cell(cfg=cfg, shape=cb.SHAPES[shape], chips=256, tp=16, fsdp=16,
+                grad_accum=8)
+    t = analytic_terms(cell)
+    assert t["an_compute_s"] > 0 and t["an_bytes_per_device"] > 0
+    assert 0 < (t["an_mfu"] or 1) <= 1.0
+    # useful-flops ratio is bounded: executed >= 0.1x model, <= ~1.1x
+    assert 0.05 < t["an_useful_ratio"] < 1.2
+
+
+def test_train_flops_scale_with_tokens():
+    cfg = cb.get_config("llama3.2-3b")
+    t1 = analytic_terms(Cell(cfg=cfg, shape=cb.SHAPES["train_4k"], chips=256,
+                             tp=16, fsdp=16))
+    big = cb.ShapeSpec("x", 4096, 512, "train")
+    t2 = analytic_terms(Cell(cfg=cfg, shape=big, chips=256, tp=16, fsdp=16))
+    np.testing.assert_allclose(t2["an_flops_per_device"],
+                               2 * t1["an_flops_per_device"], rtol=1e-6)

@@ -1,0 +1,66 @@
+"""Graph IR passes — §III-G transformations on ResNet8/ResNet20 graphs."""
+import pytest
+
+from repro.core import dataflow, graph
+
+
+@pytest.mark.parametrize("builder,blocks", [(graph.resnet8_graph, 3),
+                                            (graph.resnet20_graph, 9)])
+def test_all_residual_adds_fold(builder, blocks):
+    g = graph.optimize(builder())
+    assert sum(1 for n in g.nodes if n.op == "add") == 0
+    assert sum(1 for n in g.nodes if n.skip_in is not None) == blocks
+    assert sum(1 for n in g.nodes if n.skip_out) == blocks
+    # no BN/ReLU nodes survive folding
+    assert all(n.op not in ("bn", "relu") for n in g.nodes)
+    g.validate()
+
+
+def test_downsample_blocks_use_loop_merge():
+    g = graph.optimize(graph.resnet20_graph())
+    merged = [n for n in g.nodes
+              if any(f.startswith("downsample:") for f in n.fused)]
+    # resnet20: stages 1 and 2 first blocks have downsample convs
+    assert len(merged) == 2
+    reused = [n for n in g.nodes if "temporal_reuse" in n.fused]
+    assert len(reused) == 7
+
+
+def test_skip_buffer_halved_eq23():
+    g0 = graph.resnet20_graph()
+    g1 = graph.optimize(graph.resnet20_graph())
+    rep = graph.skip_buffer_report(g0, g1)
+    assert len(rep) == 9
+    for r in rep:
+        assert 0.45 <= r["ratio"] <= 0.55, r  # paper eq. 23: R_sc = 0.5
+
+
+def test_paper_block_dimensions_exactly():
+    """The two blocks the paper works out numerically (§III-G)."""
+    # no-downsample block: iw0=iw1=32, ich0=ich1=16, f=3x3
+    b_before = dataflow.skip_buffer_receptive_field(32, 16, 3, 3, 3, 3)
+    b_after = dataflow.skip_buffer_optimized(32, 16, 3, 3)
+    assert b_after == ((3 - 1) * 32 + 3 - 1) * 16 == 1056
+    assert b_before == (32 * 4 + 5) * 16 == 2128
+    # downsample block: iw0=32, iw1=16, ich0=16, ich1=32
+    b2_before = dataflow.skip_buffer_receptive_field(32, 16, 3, 3, 3, 3)
+    b2_after = dataflow.skip_buffer_optimized(16, 32, 3, 3)
+    assert b2_after == ((3 - 1) * 16 + 2) * 32 == 1088
+    assert abs(b_after / b_before - 0.5) < 0.01
+    assert abs(b2_after / b2_before - 0.5) < 0.02
+
+
+def test_window_buffer_fifo_partition_sums_to_eq16():
+    iw, ich, fh, fw = 32, 16, 3, 3
+    sizes = dataflow.fifo_partition(iw, ich, fh, fw)
+    assert len(sizes) == fh * fw
+    total = sum(sizes)
+    # partition covers the eq.16 line buffer (without the newest element)
+    assert total == ((fh - 1) * iw + fw - 1) * ich
+
+
+def test_validate_catches_dangling():
+    g = graph.resnet8_graph()
+    g.nodes[3].inputs = ["missing_tensor"]
+    with pytest.raises(ValueError):
+        g.validate()

@@ -1,0 +1,227 @@
+"""Layer-level numerics: every chunked/grouped implementation against its
+naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == full attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("Sq,window", [(64, 0), (64, 16), (128, 32)])
+def test_chunked_attention_matches_full(Sq, window):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, H, KV, hd = 2, 4, 2, 16
+    q = rand(ks[0], B, Sq, H, hd)
+    k = rand(ks[1], B, Sq, KV, hd)
+    v = rand(ks[2], B, Sq, KV, hd)
+    full = L.attention(q, k, v, causal=True, window=window, chunk=0)
+    chunked = L.attention(q, k, v, causal=True, window=window, chunk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_decode_matches_prefill():
+    """Decoding token-by-token through the cache must equal the prefill
+    attention at every position."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                      vocab_size=64, dtype="float32", param_dtype="float32",
+                      attn_chunk=0)
+    key = jax.random.PRNGKey(1)
+    p = L.gqa_init(key, cfg, cfg.d_model, jnp.float32)
+    B, S = 2, 12
+    x = rand(jax.random.PRNGKey(2), B, S, cfg.d_model)
+    full, _ = L.gqa_apply(p, x, cfg, causal=True)
+    cache = dict(
+        k=jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim)),
+        v=jnp.zeros((B, S, cfg.num_kv_heads, cfg.head_dim)))
+    outs = []
+    for t in range(S):
+        o, cache = L.gqa_apply(p, x[:, t:t + 1], cfg, cache=cache,
+                               pos=jnp.full((B,), t))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_swa_ring_cache_decode_matches_masked_prefill():
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                      vocab_size=64, dtype="float32", param_dtype="float32",
+                      attn_chunk=0, sliding_window=4)
+    key = jax.random.PRNGKey(1)
+    p = L.gqa_init(key, cfg, cfg.d_model, jnp.float32)
+    B, S = 2, 10
+    x = rand(jax.random.PRNGKey(2), B, S, cfg.d_model)
+    full, _ = L.gqa_apply(p, x, cfg, causal=True)
+    cache = dict(
+        k=jnp.zeros((B, cfg.sliding_window, cfg.num_kv_heads, cfg.head_dim)),
+        v=jnp.zeros((B, cfg.sliding_window, cfg.num_kv_heads, cfg.head_dim)))
+    outs = []
+    for t in range(S):
+        o, cache = L.gqa_apply(p, x[:, t:t + 1], cfg, cache=cache,
+                               pos=jnp.full((B,), t))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective scan (mamba1): chunked == naive recurrence; decode == scan
+# ---------------------------------------------------------------------------
+
+
+def _naive_selective_scan(u, dt, A, Bc, Cc, D):
+    B, S, di = u.shape
+    N = A.shape[1]
+    h = np.zeros((B, di, N))
+    ys = []
+    for t in range(S):
+        a = np.exp(dt[:, t, :, None] * A)
+        h = a * h + (dt[:, t] * u[:, t])[..., None] * Bc[:, t][:, None, :]
+        ys.append(np.einsum("bdn,bn->bd", h, Cc[:, t]))
+    y = np.stack(ys, 1) + D * u
+    return y, h
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (40, 16), (16, 16)])
+def test_selective_scan_chunked_matches_naive(S, chunk):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    B, di, N = 2, 8, 4
+    u = rand(ks[0], B, S, di)
+    dt = jax.nn.softplus(rand(ks[1], B, S, di))
+    A = -jnp.exp(rand(ks[2], di, N) * 0.5)
+    Bc = rand(ks[3], B, S, N)
+    Cc = rand(ks[4], B, S, N)
+    D = jnp.ones((di,))
+    y, h = L.selective_scan_chunked(u, dt, A, Bc, Cc, D, chunk=chunk)
+    y_ref, h_ref = _naive_selective_scan(*(np.asarray(t) for t in (u, dt, A, Bc, Cc, D)))
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2): chunked == naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def _naive_ssd(xh, dt, A, Bc, Cc):
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    h = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        a = np.exp(dt[:, t] * A)  # (B,H)
+        xw = dt[:, t][..., None] * xh[:, t]
+        h = a[:, :, None, None] * h + np.einsum("bn,bhp->bhpn", Bc[:, t], xw)
+        ys.append(np.einsum("bhpn,bn->bhp", h, Cc[:, t]))
+    return np.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16)])
+def test_ssd_chunked_matches_naive(S, chunk):
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 5)
+    B, H, P, N = 2, 3, 8, 4
+    xh = rand(ks[0], B, S, H, P)
+    dt = jax.nn.softplus(rand(ks[1], B, S, H))
+    A = -jnp.exp(rand(ks[2], H) * 0.3)
+    Bc = rand(ks[3], B, S, N)
+    Cc = rand(ks[4], B, S, N)
+    y, h = L.ssd_chunked(xh, dt, A, Bc, Cc, chunk=chunk)
+    y_ref, h_ref = _naive_ssd(*(np.asarray(t) for t in (xh, dt, A, Bc, Cc)))
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), h_ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE: grouped (sort+scan) == dense dispatch reference
+# ---------------------------------------------------------------------------
+
+
+def _moe_cfg(**kw):
+    base = dict(name="t", family="moe", num_layers=1, d_model=16,
+                num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                vocab_size=64, num_experts=4, top_k=2, moe_d_ff=32,
+                dtype="float32", param_dtype="float32",
+                moe_capacity_factor=4.0)  # high capacity => no drops
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_grouped_matches_dense():
+    cfg = _moe_cfg()
+    key = jax.random.PRNGKey(5)
+    p = L.moe_init(key, cfg, cfg.d_model, jnp.float32)
+    x = rand(jax.random.PRNGKey(6), 2, 8, cfg.d_model)
+    y_grouped = L.moe_apply(p, x, cfg)
+    y_dense = L.moe_apply(p, x, cfg.with_(moe_impl="dense"))
+    np.testing.assert_allclose(np.asarray(y_grouped), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_shared_expert():
+    cfg = _moe_cfg(num_shared_experts=1)
+    key = jax.random.PRNGKey(7)
+    p = L.moe_init(key, cfg, cfg.d_model, jnp.float32)
+    x = rand(jax.random.PRNGKey(8), 2, 8, cfg.d_model)
+    y = L.moe_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# chunked xent == full logits xent
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_xent_matches_full():
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    B, S, d, V = 2, 32, 16, 64
+    h = rand(ks[0], B, S, d)
+    emb = rand(ks[1], V, d)
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    labels = labels.at[0, :4].set(-100)
+    s, cnt = L.chunked_xent(h, emb, labels, chunk=8)
+    logits = (h @ emb.T).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, jnp.clip(labels, 0)[..., None], -1)[..., 0]
+    ref = jnp.sum(jnp.where(labels >= 0, lse - gold, 0.0))
+    np.testing.assert_allclose(float(s), float(ref), rtol=1e-5)
+    assert int(cnt) == int(jnp.sum(labels >= 0))
+
+
+# ---------------------------------------------------------------------------
+# residual fusion (add-fold) == explicit add
+# ---------------------------------------------------------------------------
+
+
+def test_residual_fusion_equivalence():
+    """cfg.residual_fusion only changes *where* the add happens (accumulator
+    init), never the math."""
+    from repro.configs import base as cb
+    from repro.models import model as M
+    cfg = cb.get_smoke_config("llama3.2-3b")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    batch = dict(tokens=tokens, labels=tokens)
+    l1, _ = M.loss_fn(params, cfg, batch)
+    l2, _ = M.loss_fn(params, cfg.with_(residual_fusion=False), batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

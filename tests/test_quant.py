@@ -1,0 +1,103 @@
+"""Paper §III-A quantization scheme: eqs. 1-5, QAT<->integer exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+from repro.core.quant import QSpec
+
+
+def test_clipping_bounds_eq2_eq3():
+    s = QSpec(8, signed=True, exp=-7)
+    u = QSpec(8, signed=False, exp=-7)
+    assert s.qmin == -128 and s.qmax == 127
+    assert u.qmin == 0 and u.qmax == 255
+    b = QSpec(16, signed=True, exp=-14)
+    assert b.qmin == -(2 ** 15) and b.qmax == 2 ** 15 - 1
+
+
+def test_accumulator_width_eq5_paper_worst_case():
+    # paper eq. (6)/(7): N_acc = 32*32*3*3 = 9216 -> 30 bits -> fits int32
+    n = Q.n_acc(32, 32, 3, 3)
+    assert n == 9216
+    assert Q.acc_bits(n) == 30
+    assert Q.acc_bits(n) <= 32
+
+
+def test_bias_scale_is_sum_of_exponents():
+    xs = QSpec(8, False, -4)
+    ws = QSpec(8, True, -7)
+    bs = Q.bias_spec(xs, ws)
+    assert bs.exp == -11 and bs.bits == 16
+
+
+@given(st.lists(st.floats(-4, 4, allow_nan=False), min_size=1, max_size=64),
+       st.integers(-10, 0))
+@settings(max_examples=50, deadline=None)
+def test_fake_quant_equals_quant_dequant(vals, e):
+    """QAT graph == integer graph (the paper's loss-matches-hardware prop)."""
+    spec = QSpec(8, True, e)
+    x = jnp.array(vals, jnp.float32)
+    fq = Q.fake_quant(x, spec)
+    qdq = Q.dequantize(Q.quantize(x, spec), spec)
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(qdq))
+
+
+def test_ste_gradient_passes_inside_clips_only():
+    spec = QSpec(8, True, -4)
+    x = jnp.array([0.5, 100.0, -100.0])  # second/third clip at +-8
+    g = jax.grad(lambda t: jnp.sum(Q.fake_quant(t, spec)))(x)
+    np.testing.assert_array_equal(np.asarray(g), np.array([1.0, 0.0, 0.0]))
+
+
+def test_requantize_shift_pure_integer_matches_float():
+    """The bit-shift requantization equals round(float rescale)."""
+    acc_exp = -14
+    out = QSpec(8, False, -4)
+    acc = jnp.arange(-(2 ** 14), 2 ** 14, 123, dtype=jnp.int32)
+    q = Q.requantize_shift(acc, acc_exp, out)
+    ref = np.clip(np.floor(np.asarray(acc) * 2.0 ** (acc_exp - out.exp) + 0.5),
+                  out.qmin, out.qmax)
+    np.testing.assert_array_equal(np.asarray(q, np.int64), ref.astype(np.int64))
+
+
+def test_calibrate_exp_covers_range():
+    x = jnp.array([-3.7, 2.1, 0.01])
+    spec = QSpec(8, True, 0)
+    e = Q.calibrate_exp(x, spec)
+    assert 127 * 2.0 ** e >= 3.7
+    assert 127 * 2.0 ** (e - 1) < 3.7  # smallest covering exponent
+
+
+@given(st.integers(1, 8), st.integers(1, 300))
+@settings(max_examples=30, deadline=None)
+def test_block_quantize_roundtrip_error_bound(rows, cols):
+    key = jax.random.PRNGKey(rows * 1000 + cols)
+    x = jax.random.normal(key, (rows, cols), jnp.float32) * 3
+    bq = Q.block_quantize(x, block=64)
+    y = Q.block_dequantize(bq, block=64)
+    # error bounded by one quantization step per block (pow2 scale)
+    amax = np.abs(np.asarray(x)).max() + 1e-9
+    step = 2.0 ** np.ceil(np.log2(amax / 127.0))
+    assert np.abs(np.asarray(y) - np.asarray(x)).max() <= step
+
+
+def test_batchnorm_fold():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    w = jax.random.normal(ks[0], (3, 3, 4, 8))
+    b = jax.random.normal(ks[1], (8,))
+    gamma = jax.random.uniform(ks[2], (8,), minval=0.5, maxval=2.0)
+    beta = jax.random.normal(ks[3], (8,))
+    mean = jax.random.normal(ks[4], (8,))
+    var = jax.random.uniform(ks[5], (8,), minval=0.1, maxval=2.0)
+    x = jax.random.normal(key, (2, 8, 8, 4))
+    conv = lambda x, w, b: jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    y_ref = (conv(x, w, b) - mean) * jax.lax.rsqrt(var + 1e-5) * gamma + beta
+    wf, bf = Q.fold_batchnorm(w, b, gamma, beta, mean, var)
+    y = conv(x, wf, bf)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4,
+                               atol=2e-4)
