@@ -9,6 +9,9 @@ paper-comparison tables:
   * table4_buffers  — skip-connection buffering, eq. 21/22/23 (R_sc = 0.5)
   * fig13_addfold   — fused residual kernel vs unfused oracle: bit-exactness
                       + HBM traffic model ratio
+  * e2e_pallas      — whole-network fused Pallas inference (ResNet8/20): FPS
+                      vs the lax integer graph, bit-exactness, and the
+                      modeled per-block HBM-traffic saving
   * kernels_micro   — per-kernel wall time (interpret mode on CPU; TPU is
                       the target, numbers are correctness-path timings)
   * roofline        — reads results/dryrun/*.json (launch.dryrun) and prints
@@ -90,14 +93,52 @@ def fig13_addfold():
     b = jnp.zeros((C,), jnp.int32)
     us = _time(lambda: resblock_fused_op(x, w0, b, w1, b, shift0=8, shift1=8,
                                          skip_shift=3))
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    ref = resblock_ref(xp, w0, b, w1, b, shift0=8, shift1=8, skip_shift=3)
+    ref = resblock_ref(x, w0, b, w1, b, shift0=8, shift1=8, skip_shift=3)
     got = resblock_fused_op(x, w0, b, w1, b, shift0=8, shift1=8, skip_shift=3)
     exact = bool((np.asarray(got) == np.asarray(ref)).all())
     hbm_f = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=True)
     hbm_u = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=False)
     print(f"fig13/resblock_fused,{us:.0f},bit_exact={exact};"
           f"hbm_traffic_ratio={hbm_u/hbm_f:.2f}x_saved")
+
+
+def e2e_pallas():
+    """Whole-network fused Pallas inference: FPS vs the lax integer graph,
+    plus the modeled per-block HBM-traffic ratio the fusion buys."""
+    print("\n## e2e_pallas — full-network fused inference "
+          "(interpret-mode timings off-TPU)")
+    print("name,us_per_call,derived")
+    from repro.models import resnet as R
+    batch = 4
+    imgs = jax.random.uniform(jax.random.PRNGKey(0), (batch, 32, 32, 3),
+                              minval=0.0, maxval=0.999)
+    for cfg, layers in ((R.RESNET8, dataflow.resnet8_layers()),
+                       (R.RESNET20, dataflow.resnet20_layers())):
+        params = R.init_params(cfg, jax.random.PRNGKey(1))
+        qp = R.quantize_params(R.fold_params(params), cfg)
+        exact = bool(np.array_equal(
+            np.asarray(R.pallas_forward(qp, cfg, imgs)),
+            np.asarray(R.int_forward(qp, cfg, imgs))))
+        us_p = _time(lambda: R.pallas_forward(qp, cfg, imgs), n=1)
+        us_i = _time(lambda: R.int_forward(qp, cfg, imgs), n=1)
+        ratios = []
+        for i, (l, stride) in enumerate(
+                [(l, l.stride) for l in layers if l.name.endswith("_0")]):
+            ds = any(x.name == f"ds{i}" for x in layers)
+            f = dataflow.residual_block_hbm_bytes(
+                l.ih, l.iw, l.ich, l.och, fused=True, downsample=ds,
+                stride=stride)
+            u = dataflow.residual_block_hbm_bytes(
+                l.ih, l.iw, l.ich, l.och, fused=False, downsample=ds,
+                stride=stride)
+            ratios.append(u / f)
+            print(f"e2e_pallas/{cfg.name}/block{i},0,"
+                  f"hbm_fused={f}B;hbm_unfused={u}B;ratio={u / f:.2f}x")
+        print(f"e2e_pallas/{cfg.name},{us_p:.0f},"
+              f"fps={batch / (us_p / 1e6):.1f};"
+              f"int_graph_fps={batch / (us_i / 1e6):.1f};"
+              f"bit_exact={exact};"
+              f"mean_block_hbm_saving={float(np.mean(ratios)):.2f}x")
 
 
 def kernels_micro():
@@ -153,6 +194,7 @@ def main() -> None:
     table3_fps()
     table4_buffers()
     fig13_addfold()
+    e2e_pallas()
     kernels_micro()
     roofline()
 

@@ -5,7 +5,9 @@
    and the skip buffers halve (eq. 23).
 2. Train quantization-aware ResNet8 (pow2-int8) for a few steps.
 3. Fold BN, quantize to the integer graph, check QAT/int agreement.
-4. Predict the FPGA throughput with the ILP balancer vs paper Table 3.
+4. Run the same quantized network through the fused Pallas kernel pipeline
+   (paper Fig. 13 add-fold dataflow) — bit-exact with the integer graph.
+5. Predict the FPGA throughput with the ILP balancer vs paper Table 3.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -61,7 +63,13 @@ acc_int = float(jnp.mean(jnp.argmax(logits_int, -1) == batch["labels"]))
 print(f"[int8] integer-graph accuracy on a fresh batch: {acc_int:.2f} "
       f"(int8 weights, int16 biases, int32 accumulators, shift requant)")
 
-# 4. FPGA throughput prediction ----------------------------------------------
+# 4. fused Pallas pipeline ----------------------------------------------------
+logits_pl = R.pallas_forward(qp, cfg, jnp.asarray(batch["images"]))
+exact = bool(np.array_equal(np.asarray(logits_pl), np.asarray(logits_int)))
+print(f"[pallas] fused kernel pipeline (stem + add-fold blocks) bit-exact "
+      f"with the integer graph: {exact}")
+
+# 5. FPGA throughput prediction ----------------------------------------------
 for plat, paper_fps in (("kv260", 30153), ("ultra96", 12971)):
     sol = ilp.predict_fps(dataflow.resnet8_layers(), plat)
     print(f"[ilp] resnet8 on {plat}: predicted {sol.fps:.0f} FPS with "

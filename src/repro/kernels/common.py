@@ -1,8 +1,24 @@
 """Shared kernel utilities."""
 import jax
+import jax.numpy as jnp
 
 
 def use_interpret() -> bool:
     """Pallas TPU kernels run in interpret mode off-TPU (this container is
     CPU-only; TPU v5e is the compile target)."""
     return jax.default_backend() != "tpu"
+
+
+def requant_u8(acc, shift: int, relu: bool = True):
+    """int32 product-domain accumulator -> u8 activation domain, with a
+    static pow2 shift in core.quant.requantize_shift's semantics: positive =
+    rounding (half-away) right shift, negative = left shift; then clip to
+    [0, 255].  The epilogue of every integer conv kernel and its oracle —
+    one home so bit-exactness can't drift between copies."""
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    if shift > 0:
+        acc = (acc + (jnp.int32(1) << (shift - 1))) >> shift
+    elif shift < 0:
+        acc = acc << (-shift)
+    return jnp.clip(acc, 0, 255).astype(jnp.uint8)

@@ -1,0 +1,58 @@
+"""Stem conv Pallas kernel: 3x3 stride-1 conv + ReLU + pow2 requant.
+
+First layer of the integer ResNet graph: uint8 input pixels (X_SPEC domain,
+u8/255-style quantized images) x int8 folded weights -> int32 accumulator
+(+ int bias at s_b = s_x + s_w), ReLU, then a rounding shift into the u8
+activation domain (A_SPEC).  With resblock_fused covering every residual
+block, this kernel completes Pallas coverage of the whole integer graph:
+feature maps enter HBM only between kernels, exactly once each.
+
+Input is pre-padded (1,1) by the wrapper (SAME for stride 1).  The input
+channel count is tiny (3); each grid step owns one image in VMEM and issues
+one MXU dot per filter tap, like conv2d_int8.  Grid: (N,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import requant_u8
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, oh, ow, shift):
+    xp = x_ref[0]                           # (H+2, W+2, 3) uint8
+    w = w_ref[...]                          # (3, 3, 3, C)
+    acc = jnp.broadcast_to(b_ref[...].astype(jnp.int32),
+                           (oh, ow, w.shape[-1])).astype(jnp.int32)
+    for kh in range(w.shape[0]):
+        for kw in range(w.shape[1]):
+            xs = jax.lax.slice(xp, (kh, kw, 0),
+                               (kh + oh, kw + ow, xp.shape[2]))
+            acc += jax.lax.dot(
+                xs.reshape(oh * ow, -1).astype(jnp.int32),
+                w[kh, kw].astype(jnp.int32),
+                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+    o_ref[0] = requant_u8(acc, shift)
+
+
+def conv_stem(x, w, b, *, shift, interpret=False):
+    """x: (N,H+2,W+2,Cin) uint8 pre-padded; w: (3,3,Cin,Cout) int8;
+    b: (Cout,) int32.  Returns (N,H,W,Cout) uint8 post-ReLU activations."""
+    N, Hp, Wp, Cin = x.shape
+    Cout = w.shape[-1]
+    oh, ow = Hp - 2, Wp - 2
+    return pl.pallas_call(
+        functools.partial(_kernel, oh=oh, ow=ow, shift=shift),
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda n: (0,) * 4),
+            pl.BlockSpec(b.shape, lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, Cout), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, oh, ow, Cout), jnp.uint8),
+        interpret=interpret,
+    )(x, w, b)

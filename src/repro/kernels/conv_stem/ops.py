@@ -1,0 +1,17 @@
+"""Jitted public wrapper for the stem conv kernel."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.conv_stem.conv_stem import conv_stem
+
+
+@partial(jax.jit, static_argnames=("shift",))
+def conv_stem_op(x, w, b, *, shift):
+    """x: (N,H,W,Cin) uint8 (unpadded); SAME 3x3 padding applied here.
+    b may be int16 (bias_spec) — widened to the int32 accumulator dtype."""
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    return conv_stem(xp, w, b.astype(jnp.int32), shift=shift,
+                     interpret=use_interpret())

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the stem conv kernel (lax SAME conv + shift requant)."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import requant_u8
+
+
+def conv_stem_ref(x, w, b, *, shift):
+    """x: (N,H,W,Cin) uint8 unpadded; mirrors models.resnet._int_conv +
+    _relu_requant for the stem layer."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    return requant_u8(acc + b.astype(jnp.int32), shift)

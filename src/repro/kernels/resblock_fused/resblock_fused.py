@@ -9,7 +9,19 @@ paper's 2x skip-buffer reduction (eq. 23).  HBM traffic per block drops from
 core.dataflow.residual_block_hbm_bytes() quantifies it and
 benchmarks/run.py reports the measured ratio.
 
-No-downsample residual block (skip = x).  Grid: (N,).
+Covers every block shape of ResNet8/20:
+
+* stride-1 identity block — skip = x, rescaled into conv1's product domain by
+  ``skip_shift`` (signed: left shift or rounding right shift).
+* stride-2 downsample block — conv0 runs strided and the 1x1 downsample conv
+  on the skip path executes *inside the same kernel*: its int32 accumulator is
+  shift-aligned from the ds product domain into conv1's product domain and
+  folded into conv1's accumulator.  The downsampled skip never exists in HBM.
+
+Padding convention (must match ``jax.lax`` SAME): the caller pre-pads the
+input with ``pad_lo = 1, pad_hi = 1`` for stride 1 and ``pad_lo = 0,
+pad_hi = 1`` for stride 2 (lax splits the 1-row SAME padding of a stride-2
+3x3 conv as (0, 1)).  Grid: (N,).
 """
 from __future__ import annotations
 
@@ -19,8 +31,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.quant import shift_align
+from repro.kernels.common import requant_u8
 
-def _conv_tap_acc(x, w, oh, ow, acc):
+
+def _conv_tap_acc(x, w, oh, ow, acc, stride=1):
     # activations are uint8 (post-ReLU, unsigned per eq. 2/3), weights int8;
     # widen to int32 for the dot — on TPU the MXU consumes the u8/s8 operands
     # natively (preferred_element_type drives the int32 accumulate).
@@ -28,7 +43,9 @@ def _conv_tap_acc(x, w, oh, ow, acc):
     for kh in range(fh):
         for kw in range(fw):
             xs = jax.lax.slice(x, (kh, kw, 0),
-                               (kh + oh, kw + ow, x.shape[2]))
+                               (kh + (oh - 1) * stride + 1,
+                                kw + (ow - 1) * stride + 1, x.shape[2]),
+                               (stride, stride, 1))
             acc += jax.lax.dot(
                 xs.reshape(oh * ow, -1).astype(jnp.int32),
                 w[kh, kw].astype(jnp.int32),
@@ -36,49 +53,73 @@ def _conv_tap_acc(x, w, oh, ow, acc):
     return acc
 
 
-def _requant(acc, shift, relu=True):
-    if relu:
-        acc = jnp.maximum(acc, 0)
-    if shift > 0:
-        acc = (acc + (jnp.int32(1) << (shift - 1))) >> shift
-    return jnp.clip(acc, 0, 255)
-
-
-def _kernel(x_ref, w0_ref, b0_ref, w1_ref, b1_ref, o_ref, *,
-            h, w, shift0, shift1, skip_shift):
-    xp = x_ref[0]                           # (H+2, W+2, C) uint8 padded
-    # ---- conv0 + relu + requant (stays in VMEM) ----
+def _kernel(x_ref, w0_ref, b0_ref, w1_ref, b1_ref, wd_ref, bd_ref, o_ref, *,
+            oh, ow, stride, shift0, shift1, skip_shift, has_ds, pad_lo):
+    xp = x_ref[0]                           # (Hp, Wp, Cin) uint8 padded
+    co = b0_ref.shape[0]
+    # ---- conv0 (strided) + relu + requant (stays in VMEM) ----
     acc0 = jnp.broadcast_to(b0_ref[...].astype(jnp.int32),
-                            (h, w, b0_ref.shape[0])).astype(jnp.int32)
-    acc0 = _conv_tap_acc(xp, w0_ref[...], h, w, acc0)
-    y0 = _requant(acc0, shift0).astype(jnp.uint8)           # (H,W,C)
+                            (oh, ow, co)).astype(jnp.int32)
+    acc0 = _conv_tap_acc(xp, w0_ref[...], oh, ow, acc0, stride)
+    y0 = requant_u8(acc0, shift0)                           # (oh,ow,Cout)
     y0p = jnp.pad(y0, ((1, 1), (1, 1), (0, 0)))
-    # ---- conv1 with add-fold: skip (=x) initializes the accumulator ----
-    skip = jax.lax.slice(xp, (1, 1, 0), (1 + h, 1 + w, xp.shape[2]))
-    acc1 = skip.astype(jnp.int32) << skip_shift   # rescale into product domain
-    acc1 = acc1 + b1_ref[...].astype(jnp.int32)
-    acc1 = _conv_tap_acc(y0p, w1_ref[...], h, w, acc1)
-    o_ref[0] = _requant(acc1, shift1).astype(jnp.uint8)
+    # ---- skip stream, rescaled into conv1's product domain ----
+    if has_ds:
+        # fused 1x1 downsample conv: SAME padding of a 1x1 conv is zero, so
+        # output o reads x[o*stride] = xp[pad_lo + o*stride]
+        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                           (pad_lo + (oh - 1) * stride + 1,
+                            pad_lo + (ow - 1) * stride + 1, xp.shape[2]),
+                           (stride, stride, 1))             # (oh,ow,Cin)
+        accd = jax.lax.dot(
+            xs.reshape(oh * ow, -1).astype(jnp.int32),
+            wd_ref[...][0, 0].astype(jnp.int32),
+            preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+        accd = accd + bd_ref[...].astype(jnp.int32)
+        skip = shift_align(accd, skip_shift)
+    else:
+        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                           (pad_lo + oh, pad_lo + ow, xp.shape[2]))
+        skip = shift_align(xs, skip_shift)
+    # ---- conv1 with add-fold: skip initializes the accumulator ----
+    acc1 = skip + b1_ref[...].astype(jnp.int32)
+    acc1 = _conv_tap_acc(y0p, w1_ref[...], oh, ow, acc1)
+    o_ref[0] = requant_u8(acc1, shift1)
 
 
-def resblock_fused(x, w0, b0, w1, b1, *, shift0, shift1, skip_shift=0,
-                   interpret=False):
-    """x: (N,H+2,W+2,C) uint8 pre-padded; w0/w1: (3,3,C,C) int8;
-    b0/b1: (C,) int32.  shifts: pow2 requant shifts.  Returns (N,H,W,C) u8."""
-    N, Hp, Wp, C = x.shape
-    h, w = Hp - 2, Wp - 2
+def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
+                   shift0, shift1, skip_shift=0, interpret=False):
+    """x: (N,Hp,Wp,Cin) uint8 pre-padded per the module's SAME convention;
+    w0: (3,3,Cin,Cout) int8; w1: (3,3,Cout,Cout) int8; b0/b1: (Cout,) int32;
+    wd: (1,1,Cin,Cout) int8 + bd: (Cout,) int32 for the fused downsample skip
+    (None for identity skip).  shift0/shift1: pow2 requant shifts (positive =
+    right shift); skip_shift: signed product-domain alignment shift.
+    Returns (N,oh,ow,Cout) uint8."""
+    N, Hp, Wp, Cin = x.shape
+    Cout = w0.shape[-1]
+    has_ds = wd is not None
+    pad_lo = 1 if stride == 1 else 0
+    oh = (Hp - 3) // stride + 1
+    ow = (Wp - 3) // stride + 1
+    if not has_ds:
+        assert stride == 1 and Cin == Cout, "identity skip needs stride 1"
+        wd = jnp.zeros((1, 1, Cin, Cout), jnp.int8)
+        bd = jnp.zeros((Cout,), jnp.int32)
     return pl.pallas_call(
-        functools.partial(_kernel, h=h, w=w, shift0=shift0, shift1=shift1,
-                          skip_shift=skip_shift),
+        functools.partial(_kernel, oh=oh, ow=ow, stride=stride, shift0=shift0,
+                          shift1=shift1, skip_shift=skip_shift, has_ds=has_ds,
+                          pad_lo=pad_lo),
         grid=(N,),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, C), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((1, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec(w0.shape, lambda n: (0,) * 4),
             pl.BlockSpec(b0.shape, lambda n: (0,)),
             pl.BlockSpec(w1.shape, lambda n: (0,) * 4),
             pl.BlockSpec(b1.shape, lambda n: (0,)),
+            pl.BlockSpec(wd.shape, lambda n: (0,) * 4),
+            pl.BlockSpec(bd.shape, lambda n: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, h, w, C), lambda n: (n, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((N, h, w, C), jnp.uint8),
+        out_specs=pl.BlockSpec((1, oh, ow, Cout), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, oh, ow, Cout), jnp.uint8),
         interpret=interpret,
-    )(x, w0, b0, w1, b1)
+    )(x, w0, b0, w1, b1, wd, bd)

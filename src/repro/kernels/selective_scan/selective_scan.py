@@ -29,7 +29,8 @@ def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, *,
         a = jnp.exp(dt[:, None] * A)
         h = a * h + (dt * u)[:, None] * Bt[None, :]
         y = jnp.sum(h * Ct[None, :], axis=-1)      # (bd,)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)), y[None, :])
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y[None, None, :])
         return h
 
     h = jax.lax.fori_loop(0, seq_len, step, h)

@@ -287,29 +287,73 @@ def int_forward(qparams, cfg: ResNetConfig, images):
     for qb, stride in zip(qparams["blocks"], block_strides(cfg)):
         acc0 = _int_conv(h, qb["conv0"], stride)
         y = _relu_requant(acc0, qb["conv0"])
+        sh = block_shifts(qb)["skip_shift"]
         if "ds" in qb:
-            accd = _int_conv(h, qb["ds"], stride)
             # align the ds product domain to conv1's product domain (shift)
-            eds = qb["ds"]["x_spec"].exp + qb["ds"]["w_spec"].exp
-            e1 = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
-            sh = eds - e1
-            if sh >= 0:
-                skip_q = accd << sh
-            else:
-                half = jnp.int32(1) << (-sh - 1)
-                skip_q = (accd + half) >> (-sh)
+            skip_q = Q.shift_align(_int_conv(h, qb["ds"], stride), sh)
         else:
             # re-quantize the skip stream into conv1's product domain so it
             # can initialize the accumulator (pure shift, either direction)
-            skip_exp = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
-            sh = A_SPEC.exp - skip_exp
-            if sh >= 0:
-                skip_q = h.astype(jnp.int32) << sh
-            else:
-                half = jnp.int32(1) << (-sh - 1)
-                skip_q = (h.astype(jnp.int32) + half) >> (-sh)
+            skip_q = Q.shift_align(h, sh)
         acc1 = _int_conv(y, qb["conv1"], 1, acc_init=skip_q)
         h = _relu_requant(acc1, qb["conv1"])
+    hf = Q.dequantize(h, A_SPEC)
+    pooled = jnp.mean(hf, axis=(1, 2))
+    wf = Q.dequantize(qparams["fc"]["wq"], qparams["fc"]["w_spec"])
+    return pooled @ wf + qparams["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas inference pipeline — the whole integer graph through kernels
+# ---------------------------------------------------------------------------
+
+
+def block_shifts(qb) -> dict:
+    """Static pow2 shifts for one quantized block, in the kernels' semantics.
+
+    shift0/shift1 requantize the conv product domain (s_x + s_w) back to
+    A_SPEC (positive = rounding right shift); skip_shift aligns the skip
+    stream into conv1's product domain (signed: >=0 left shift, <0 rounding
+    right shift) — exactly the arithmetic int_forward performs."""
+    e0 = qb["conv0"]["x_spec"].exp + qb["conv0"]["w_spec"].exp
+    e1 = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
+    out = dict(shift0=A_SPEC.exp - e0, shift1=A_SPEC.exp - e1)
+    if "ds" in qb:
+        eds = qb["ds"]["x_spec"].exp + qb["ds"]["w_spec"].exp
+        out["skip_shift"] = eds - e1
+    else:
+        out["skip_shift"] = A_SPEC.exp - e1
+    return out
+
+
+def pallas_forward(qparams, cfg: ResNetConfig, images):
+    """``int_forward`` lowered entirely through the fused Pallas kernels.
+
+    Stem: conv_stem (conv3x3 + ReLU + shift requant).  Every residual block:
+    one resblock_fused call — conv0 (stride 1 or 2), ReLU/requant, the 1x1
+    downsample conv on the skip path when present, the add-fold into conv1's
+    int32 accumulator, ReLU/requant — with y0 and the skip stream living in
+    VMEM for the kernel's lifetime (paper Fig. 13).  Feature maps touch HBM
+    exactly once per kernel boundary.  Bit-exact with ``int_forward``
+    (asserted in tests/test_pallas_forward.py); float ops only at the final
+    average-pool + classifier, identical to int_forward's tail."""
+    from repro.kernels.conv_stem.ops import conv_stem_op
+    from repro.kernels.resblock_fused.ops import resblock_fused_op
+
+    xq = Q.quantize(images, X_SPEC)  # uint8 feature map
+    st = qparams["stem"]
+    stem_shift = A_SPEC.exp - (st["x_spec"].exp + st["w_spec"].exp)
+    h = conv_stem_op(xq, st["wq"], st["bq"], shift=stem_shift)
+    for qb, stride in zip(qparams["blocks"], block_strides(cfg)):
+        sh = block_shifts(qb)
+        wd = bd = None
+        if "ds" in qb:
+            wd = qb["ds"]["wq"]
+            bd = qb["ds"]["bq"].astype(jnp.int32)
+        h = resblock_fused_op(
+            h, qb["conv0"]["wq"], qb["conv0"]["bq"].astype(jnp.int32),
+            qb["conv1"]["wq"], qb["conv1"]["bq"].astype(jnp.int32),
+            wd, bd, stride=stride, **sh)
     hf = Q.dequantize(h, A_SPEC)
     pooled = jnp.mean(hf, axis=(1, 2))
     wf = Q.dequantize(qparams["fc"]["wq"], qparams["fc"]["w_spec"])

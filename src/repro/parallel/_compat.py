@@ -1,0 +1,25 @@
+"""jax version shims for the parallel layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` -> ``check_vma`` along
+the way.  Call sites here always use the modern spelling (``check_vma``); this
+wrapper translates for older jax.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                    # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {}
+    if check_vma is not None:
+        kw["check_vma" if _HAS_VMA else "check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

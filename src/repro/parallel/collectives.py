@@ -14,8 +14,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.parallel._compat import shard_map
 
 from repro.core import quant as Q
 

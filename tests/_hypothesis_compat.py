@@ -1,0 +1,72 @@
+"""``hypothesis`` if installed, else a tiny deterministic fallback.
+
+The property tests only need ``given``/``settings`` and four strategies
+(integers, floats, sampled_from, lists).  When hypothesis is missing from the
+environment (it is an optional dev dependency, see requirements-dev.txt) we
+substitute a seeded pseudo-random sampler so the same tests still run — with
+fewer examples and no shrinking, but identical assertions.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # sample(rng) -> value
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        # NOTE: the wrapper must take no parameters — pytest reads the test
+        # signature to resolve fixtures, and the drawn arguments are not
+        # fixtures (real hypothesis hides them the same way).
+        def deco(fn):
+            n = min(getattr(fn, "_max_examples", 20), 20)
+
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(*[s.sample(rng) for s in strats])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+strategies = st

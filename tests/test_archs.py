@@ -21,6 +21,7 @@ def _batch(cfg, key, B=2, S=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", cb.ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = cb.get_smoke_config(arch)
@@ -61,6 +62,7 @@ def test_smoke_decode_step(arch):
 
 @pytest.mark.parametrize("arch", ["llama3.2-3b", "mixtral-8x22b",
                                   "falcon-mamba-7b"])
+@pytest.mark.slow
 def test_decode_matches_prefill_logits(arch):
     """Decoding a prompt token-by-token must reproduce the prefill logits at
     the last position (cache correctness across families)."""

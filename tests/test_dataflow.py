@@ -1,7 +1,7 @@
 """Dataflow buffer model + analytic roofline sanity (hypothesis sweeps)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import base as cb
 from repro.core import dataflow as df

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.conv2d_int8.ops import conv2d_int8_op
 from repro.kernels.conv2d_int8.ref import conv2d_int8_ref
@@ -117,9 +117,46 @@ def test_resblock_fused_bitexact(N, H, C):
     b0 = jax.random.randint(jax.random.fold_in(key, 3), (C,), -500, 500, jnp.int32)
     b1 = jax.random.randint(jax.random.fold_in(key, 4), (C,), -500, 500, jnp.int32)
     out = resblock_fused_op(x, w0, b0, w1, b1, shift0=8, shift1=8, skip_shift=3)
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
-    ref = resblock_ref(xp, w0, b0, w1, b1, shift0=8, shift1=8, skip_shift=3)
+    ref = resblock_ref(x, w0, b0, w1, b1, shift0=8, shift1=8, skip_shift=3)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("N,H,Cin,Cout,skip_shift", [
+    (1, 8, 4, 8, 3), (2, 16, 16, 32, 0), (1, 32, 16, 32, -2),
+])
+def test_resblock_fused_strided_downsample_bitexact(N, H, Cin, Cout,
+                                                    skip_shift):
+    """The paper's stride-2 block: strided conv0 + the 1x1 downsample conv on
+    the skip path fused into the same kernel, signed skip alignment shift."""
+    key = jax.random.PRNGKey(H * Cin + Cout)
+    x = jax.random.randint(key, (N, H, H, Cin), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    w0 = _i8(jax.random.fold_in(key, 1), 3, 3, Cin, Cout)
+    w1 = _i8(jax.random.fold_in(key, 2), 3, 3, Cout, Cout)
+    wd = _i8(jax.random.fold_in(key, 3), 1, 1, Cin, Cout)
+    b0, b1, bd = (jax.random.randint(jax.random.fold_in(key, 4 + i), (Cout,),
+                                     -500, 500, jnp.int32) for i in range(3))
+    out = resblock_fused_op(x, w0, b0, w1, b1, wd, bd, stride=2,
+                            shift0=8, shift1=8, skip_shift=skip_shift)
+    ref = resblock_ref(x, w0, b0, w1, b1, wd, bd, stride=2,
+                       shift0=8, shift1=8, skip_shift=skip_shift)
+    assert out.shape == (N, H // 2, H // 2, Cout)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_conv_stem_bitexact():
+    from repro.kernels.conv_stem.ops import conv_stem_op
+    from repro.kernels.conv_stem.ref import conv_stem_ref
+    key = jax.random.PRNGKey(5)
+    x = jax.random.randint(key, (2, 16, 16, 3), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    w = _i8(jax.random.fold_in(key, 1), 3, 3, 3, 16)
+    b = jax.random.randint(jax.random.fold_in(key, 2), (16,), -500, 500,
+                           jnp.int32)
+    for shift in (9, 0, -1):
+        out = conv_stem_op(x, w, b, shift=shift)
+        ref = conv_stem_ref(x, w, b, shift=shift)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_resblock_fused_hbm_model():

@@ -1,0 +1,92 @@
+"""End-to-end fused Pallas pipeline: bit-exactness vs the lax integer graph
+(interpret mode on CPU; TPU v5e is the compile target) and the serving
+engine built on top of it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import resnet as R
+from repro.serve.engine import ImageRequest, ResNetEngine
+
+
+def _qparams(cfg, seed):
+    params = R.init_params(cfg, jax.random.PRNGKey(seed))
+    return R.quantize_params(R.fold_params(params), cfg)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.uniform(jax.random.PRNGKey(0), (4, 32, 32, 3),
+                              minval=0.0, maxval=0.999)
+
+
+@pytest.mark.parametrize("cfg", [R.RESNET8, R.RESNET20],
+                         ids=lambda c: c.name)
+@pytest.mark.slow
+def test_pallas_forward_bitexact_with_int_forward(cfg, images):
+    """The whole network — stem, every stride-1 block, and every stride-2
+    downsample block of all three stages — through the fused kernels equals
+    the lax integer graph exactly (same int32 accumulators, same shifts)."""
+    qp = _qparams(cfg, seed=2)
+    ref = R.int_forward(qp, cfg, images)
+    got = R.pallas_forward(qp, cfg, images)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_pallas_forward_covers_downsample_blocks():
+    """ResNet8/20 have exactly 2 downsample blocks (stage 1 and 2 entries);
+    the pipeline must route them through the fused ds path."""
+    for cfg in (R.RESNET8, R.RESNET20):
+        qp = _qparams(cfg, seed=3)
+        ds_blocks = [i for i, qb in enumerate(qp["blocks"]) if "ds" in qb]
+        strides = R.block_strides(cfg)
+        assert len(ds_blocks) == 2
+        assert all(strides[i] == 2 for i in ds_blocks)
+
+
+def test_block_shifts_match_int_forward_arithmetic():
+    """block_shifts must reproduce the exponent arithmetic in int_forward:
+    requant shifts are A - (s_x + s_w); skip alignment is into conv1's
+    product domain."""
+    qp = _qparams(R.RESNET8, seed=4)
+    for qb in qp["blocks"]:
+        sh = R.block_shifts(qb)
+        e1 = qb["conv1"]["x_spec"].exp + qb["conv1"]["w_spec"].exp
+        assert sh["shift1"] == R.A_SPEC.exp - e1
+        if "ds" in qb:
+            eds = qb["ds"]["x_spec"].exp + qb["ds"]["w_spec"].exp
+            assert sh["skip_shift"] == eds - e1
+        else:
+            assert sh["skip_shift"] == R.A_SPEC.exp - e1
+
+
+@pytest.mark.slow
+def test_resnet_engine_pallas_default_matches_int_backend(images):
+    cfg = R.RESNET8
+    qp = _qparams(cfg, seed=5)
+    imgs = np.asarray(images)
+    engines = [ResNetEngine(cfg, qp, batch=3),            # default backend
+               ResNetEngine(cfg, qp, batch=3, backend="int")]
+    assert engines[0].backend == "pallas"
+    for eng in engines:
+        for i, img in enumerate(imgs):
+            eng.submit(ImageRequest(rid=i, image=img))
+        reqs = list(eng.queue)
+        eng.run()
+        assert eng.served == len(imgs)
+        assert all(r.done for r in reqs)
+        eng.results = [(r.label, r.logits) for r in reqs]
+    for (la, lo_a), (lb, lo_b) in zip(*[e.results for e in engines]):
+        assert la == lb
+        np.testing.assert_array_equal(lo_a, lo_b)
+
+
+def test_resnet_engine_drains_queue_in_fixed_batches(images):
+    cfg = R.RESNET8
+    qp = _qparams(cfg, seed=6)
+    eng = ResNetEngine(cfg, qp, batch=4)
+    for i in range(6):                   # 6 requests -> 2 ticks (4 + 2)
+        eng.submit(ImageRequest(rid=i, image=np.asarray(images[i % 4])))
+    ticks = eng.run()
+    assert ticks == 2 and eng.served == 6 and not eng.queue

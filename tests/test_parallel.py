@@ -116,6 +116,7 @@ def test_pipeline_step_matches_serial():
     assert "PIPE_OK" in out
 
 
+@pytest.mark.slow
 def test_collective_matmul_matches_dense():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
@@ -132,11 +133,12 @@ def test_collective_matmul_matches_dense():
     assert "CM_OK" in out
 
 
+@pytest.mark.slow
 def test_compressed_grad_allreduce():
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
-        from jax import shard_map
+        from repro.parallel._compat import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.parallel.collectives import (compressed_psum_grads,
                                                 init_error_state)
@@ -165,6 +167,7 @@ def test_compressed_grad_allreduce():
     assert "AR_OK" in out
 
 
+@pytest.mark.slow
 def test_dryrun_minicell_subprocess():
     """End-to-end: one real dry-run cell on the production 16x16 mesh."""
     out = run_sub("""

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import quant as Q
 from repro.core.quant import QSpec
@@ -71,6 +71,7 @@ def test_calibrate_exp_covers_range():
     assert 127 * 2.0 ** (e - 1) < 3.7  # smallest covering exponent
 
 
+@pytest.mark.slow
 @given(st.integers(1, 8), st.integers(1, 300))
 @settings(max_examples=30, deadline=None)
 def test_block_quantize_roundtrip_error_bound(rows, cols):

@@ -112,6 +112,7 @@ def test_residual_add_fold_exactness_in_int_graph(small_batch):
     assert np.isfinite(np.asarray(out)).all()
 
 
+@pytest.mark.slow
 def test_int_graph_accuracy_matches_float_after_calibration():
     """Train briefly, calibrate BN, fold+quantize: the integer graph's
     accuracy must track the float QAT graph (paper's deploy flow)."""

@@ -66,6 +66,7 @@ def test_int8_optimizer_state_is_quantized():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_and_retention(tmp_path):
     tree = dict(a=jnp.arange(6.0).reshape(2, 3), b=[jnp.ones(4),
                                                     jnp.zeros((2, 2))])
@@ -130,6 +131,7 @@ def test_pipeline_restart_reproducibility():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_loop_resume_bitexact(tmp_path):
     cfg = R.RESNET8
     opt = opt_lib.sgdm(lr=0.05, total_steps=20)
