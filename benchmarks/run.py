@@ -1,17 +1,22 @@
 """Benchmark harness — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --json results/bench.json
 
-Outputs ``name,us_per_call,derived`` CSV rows per benchmark plus the
-paper-comparison tables:
+Each benchmark prints ``name,us_per_call,derived`` CSV rows and records the
+same row with *unformatted* values; ``--json`` dumps the full run as
+
+    {"rows": [{"name": ..., "us_per_call": ..., "derived": {...}}, ...]}
+
+so the perf trajectory is machine-trackable across PRs.  Benchmarks:
   * table3_fps      — ILP throughput model vs paper Table 3 (4 platform x
                       model cells: FPS, Gops/s, DSPs)
   * table4_buffers  — skip-connection buffering, eq. 21/22/23 (R_sc = 0.5)
   * fig13_addfold   — fused residual kernel vs unfused oracle: bit-exactness
                       + HBM traffic model ratio
-  * e2e_pallas      — whole-network fused Pallas inference (ResNet8/20): FPS
-                      vs the lax integer graph, bit-exactness, and the
-                      modeled per-block HBM-traffic saving
+  * e2e_pallas      — whole-network inference through ``repro.compile``:
+                      compiled pallas vs compiled lax-int executables (FPS,
+                      bit-exactness, modeled per-block HBM-traffic saving)
   * kernels_micro   — per-kernel wall time (interpret mode on CPU; TPU is
                       the target, numbers are correctness-path timings)
   * roofline        — reads results/dryrun/*.json (launch.dryrun) and prints
@@ -19,6 +24,7 @@ paper-comparison tables:
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -32,6 +38,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import dataflow, graph, ilp  # noqa: E402
+
+ROWS = []
+
+
+def emit(name, us, **derived):
+    """Print one CSV row and record it for the ``--json`` dump."""
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+    print(f"{name},{us:.0f}," + ";".join(f"{k}={fmt(v)}"
+                                         for k, v in derived.items()))
+    ROWS.append(dict(name=name, us_per_call=round(us, 1), derived=derived))
 
 
 def _time(fn, *args, n=3):
@@ -57,10 +77,10 @@ def table3_fps():
             sol = ilp.predict_fps(layers, plat)
             us = (time.perf_counter() - t0) * 1e6
             pf, pg = paper[(plat, name)]
-            print(f"table3/{plat}/{name},{us:.0f},"
-                  f"fps={sol.fps:.0f};paper_fps={pf};"
-                  f"err={sol.fps/pf-1:+.1%};gops={sol.gops:.0f};"
-                  f"dsp={sol.dsp_used}")
+            emit(f"table3/{plat}/{name}", us,
+                 fps=round(sol.fps), paper_fps=pf,
+                 err=round(sol.fps / pf - 1, 4), gops=round(sol.gops),
+                 dsp=sol.dsp_used)
 
 
 def table4_buffers():
@@ -72,10 +92,10 @@ def table4_buffers():
     rep = graph.skip_buffer_report(g0, g1)
     us = (time.perf_counter() - t0) * 1e6
     mean_ratio = float(np.mean([r["ratio"] for r in rep]))
-    print(f"table4/resnet20,{us:.0f},blocks={len(rep)};"
-          f"mean_R_sc={mean_ratio:.3f};paper_R_sc=0.5")
+    emit("table4/resnet20", us, blocks=len(rep),
+         mean_R_sc=round(mean_ratio, 3), paper_R_sc=0.5)
     adds = sum(1 for n in g1.nodes if n.op == "add")
-    print(f"table4/addfold,{us:.0f},residual_adds_after_opt={adds}")
+    emit("table4/addfold", us, residual_adds_after_opt=adds)
 
 
 def fig13_addfold():
@@ -98,29 +118,32 @@ def fig13_addfold():
     exact = bool((np.asarray(got) == np.asarray(ref)).all())
     hbm_f = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=True)
     hbm_u = dataflow.residual_block_hbm_bytes(32, 32, 16, 16, fused=False)
-    print(f"fig13/resblock_fused,{us:.0f},bit_exact={exact};"
-          f"hbm_traffic_ratio={hbm_u/hbm_f:.2f}x_saved")
+    emit("fig13/resblock_fused", us, bit_exact=exact,
+         hbm_traffic_ratio_saved=round(hbm_u / hbm_f, 2))
 
 
 def e2e_pallas():
-    """Whole-network fused Pallas inference: FPS vs the lax integer graph,
-    plus the modeled per-block HBM-traffic ratio the fusion buys."""
-    print("\n## e2e_pallas — full-network fused inference "
+    """Whole-network inference through ``repro.compile``: the optimized graph
+    lowered once per backend into a fixed-shape executable, timed executable
+    vs executable (pallas vs lax-int), plus the modeled per-block HBM ratio."""
+    print("\n## e2e_pallas — compiled full-network inference "
           "(interpret-mode timings off-TPU)")
     print("name,us_per_call,derived")
+    from repro.compile import compile_model
     from repro.models import resnet as R
     batch = 4
     imgs = jax.random.uniform(jax.random.PRNGKey(0), (batch, 32, 32, 3),
                               minval=0.0, maxval=0.999)
     for cfg, layers in ((R.RESNET8, dataflow.resnet8_layers()),
-                       (R.RESNET20, dataflow.resnet20_layers())):
+                        (R.RESNET20, dataflow.resnet20_layers())):
         params = R.init_params(cfg, jax.random.PRNGKey(1))
         qp = R.quantize_params(R.fold_params(params), cfg)
-        exact = bool(np.array_equal(
-            np.asarray(R.pallas_forward(qp, cfg, imgs)),
-            np.asarray(R.int_forward(qp, cfg, imgs))))
-        us_p = _time(lambda: R.pallas_forward(qp, cfg, imgs), n=1)
-        us_i = _time(lambda: R.int_forward(qp, cfg, imgs), n=1)
+        cm_p = compile_model(cfg, qp, backend="pallas", batch_sizes=(batch,))
+        cm_i = compile_model(cfg, qp, backend="lax-int", batch_sizes=(batch,))
+        exact = bool(np.array_equal(np.asarray(cm_p(imgs)),
+                                    np.asarray(cm_i(imgs))))
+        us_p = _time(lambda: cm_p(imgs), n=1)
+        us_i = _time(lambda: cm_i(imgs), n=1)
         ratios = []
         for i, (l, stride) in enumerate(
                 [(l, l.stride) for l in layers if l.name.endswith("_0")]):
@@ -132,13 +155,14 @@ def e2e_pallas():
                 l.ih, l.iw, l.ich, l.och, fused=False, downsample=ds,
                 stride=stride)
             ratios.append(u / f)
-            print(f"e2e_pallas/{cfg.name}/block{i},0,"
-                  f"hbm_fused={f}B;hbm_unfused={u}B;ratio={u / f:.2f}x")
-        print(f"e2e_pallas/{cfg.name},{us_p:.0f},"
-              f"fps={batch / (us_p / 1e6):.1f};"
-              f"int_graph_fps={batch / (us_i / 1e6):.1f};"
-              f"bit_exact={exact};"
-              f"mean_block_hbm_saving={float(np.mean(ratios)):.2f}x")
+            emit(f"e2e_pallas/{cfg.name}/block{i}", 0,
+                 hbm_fused_B=f, hbm_unfused_B=u, ratio=round(u / f, 2))
+        emit(f"e2e_pallas/{cfg.name}", us_p,
+             fps=round(batch / (us_p / 1e6), 1),
+             int_graph_fps=round(batch / (us_i / 1e6), 1),
+             bit_exact=exact,
+             mean_block_hbm_saving=round(float(np.mean(ratios)), 2),
+             retraces=max(cm_p.trace_counts.values()))
 
 
 def kernels_micro():
@@ -149,12 +173,12 @@ def kernels_micro():
     a = jax.random.randint(key, (128, 128), -128, 128, jnp.int32).astype(jnp.int8)
     b = jax.random.randint(key, (128, 128), -128, 128, jnp.int32).astype(jnp.int8)
     us = _time(matmul_int8_op, a, b)
-    print(f"kernel/matmul_int8_128,{us:.0f},int8->int32_MXU_tiles")
+    emit("kernel/matmul_int8_128", us, note="int8->int32_MXU_tiles")
     from repro.kernels.flash_attention.ops import flash_attention_op
     q = jax.random.normal(key, (1, 128, 4, 32))
     us = _time(lambda: flash_attention_op(q, q[:, :, :4], q[:, :, :4],
                                           bq=64, bk=64))
-    print(f"kernel/flash_attention_128,{us:.0f},online_softmax")
+    emit("kernel/flash_attention_128", us, note="online_softmax")
     from repro.kernels.selective_scan.ops import selective_scan_op
     u = jax.random.normal(key, (2, 64, 32))
     dt = jax.nn.softplus(u)
@@ -162,12 +186,12 @@ def kernels_micro():
     Bc = jax.random.normal(key, (2, 64, 8))
     h0 = jnp.zeros((2, 32, 8))
     us = _time(lambda: selective_scan_op(u, dt, A, Bc, Bc, h0, bd=16))
-    print(f"kernel/selective_scan_64,{us:.0f},mamba1_recurrence")
+    emit("kernel/selective_scan_64", us, note="mamba1_recurrence")
     from repro.kernels.conv2d_int8.ops import conv2d_int8_op
     x = jax.random.randint(key, (2, 16, 16, 16), -128, 128, jnp.int32).astype(jnp.int8)
     w = jax.random.randint(key, (3, 3, 16, 16), -128, 128, jnp.int32).astype(jnp.int8)
     us = _time(lambda: conv2d_int8_op(x, w, jnp.zeros((16,), jnp.int32)))
-    print(f"kernel/conv2d_int8_16,{us:.0f},nhwc_vmem_tiles")
+    emit("kernel/conv2d_int8_16", us, note="nhwc_vmem_tiles")
 
 
 def roofline():
@@ -175,28 +199,43 @@ def roofline():
     print("name,us_per_call,derived")
     d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
     if not os.path.isdir(d):
-        print("roofline/missing,0,run launch.dryrun_all first")
+        emit("roofline/missing", 0, note="run launch.dryrun_all first")
         return
     import glob
     for f in sorted(glob.glob(os.path.join(d, "*__single.json"))):
         r = json.load(open(f))
         tag = f"{r['arch']}/{r['shape']}"
         if r.get("skipped"):
-            print(f"roofline/{tag},0,SKIP_full_attention")
+            emit(f"roofline/{tag}", 0, note="SKIP_full_attention")
             continue
-        print(f"roofline/{tag},0,"
-              f"compute={r['an_compute_s']:.3g}s;memory={r['an_memory_s']:.3g}s;"
-              f"collective={r['an_collective_s']:.3g}s;"
-              f"bottleneck={r['an_bottleneck']};mfu_bound={r['an_mfu']:.3f}")
+        emit(f"roofline/{tag}", 0,
+             compute_s=r["an_compute_s"], memory_s=r["an_memory_s"],
+             collective_s=r["an_collective_s"],
+             bottleneck=r["an_bottleneck"], mfu_bound=r["an_mfu"])
 
 
 def main() -> None:
-    table3_fps()
-    table4_buffers()
-    fig13_addfold()
-    e2e_pallas()
-    kernels_micro()
-    roofline()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as machine-readable JSON")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args()
+    benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
+                   fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
+                   kernels_micro=kernels_micro, roofline=roofline)
+    names = args.only.split(",") if args.only else list(benches)
+    unknown = [n for n in names if n not in benches]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; "
+                 f"choose from {list(benches)}")
+    for name in names:
+        benches[name]()
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(dict(rows=ROWS), f, indent=1, default=str)
+        print(f"\nwrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,11 @@
    (loop merge / temporal reuse / add-fold) — watch the Add nodes disappear
    and the skip buffers halve (eq. 23).
 2. Train quantization-aware ResNet8 (pow2-int8) for a few steps.
-3. Fold BN, quantize to the integer graph, check QAT/int agreement.
-4. Run the same quantized network through the fused Pallas kernel pipeline
-   (paper Fig. 13 add-fold dataflow) — bit-exact with the integer graph.
+3. Fold BN, quantize into typed containers (repro.compile.QResNetParams),
+   run the integer graph, check QAT/int agreement.
+4. compile_model: lower the optimized graph through the fused Pallas kernel
+   backend into a fixed-shape executable (paper Fig. 13 add-fold dataflow) —
+   bit-exact with the integer graph — and serve it with ResNetEngine.
 5. Predict the FPGA throughput with the ILP balancer vs paper Table 3.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -15,9 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compile as C
 from repro.core import dataflow, graph, ilp
 from repro.data.synthetic import SyntheticCifar
 from repro.models import resnet as R
+from repro.serve.engine import ImageRequest, ResNetEngine
 from repro.train import optimizer as opt_lib
 
 # 1. graph optimization -----------------------------------------------------
@@ -56,18 +60,26 @@ print(f"[train] step 30: loss={float(m['loss']):.3f} "
 # 3. integer inference graph --------------------------------------------------
 params = R.calibrate_bn(params, cfg, jnp.asarray(pipe.next()["images"]))
 folded = R.fold_params(params)
-qp = R.quantize_params(folded, cfg)
+qp = C.QResNetParams.from_dict(R.quantize_params(folded, cfg))  # typed pytree
 batch = pipe.next()
 logits_int = R.int_forward(qp, cfg, jnp.asarray(batch["images"]))
 acc_int = float(jnp.mean(jnp.argmax(logits_int, -1) == batch["labels"]))
 print(f"[int8] integer-graph accuracy on a fresh batch: {acc_int:.2f} "
       f"(int8 weights, int16 biases, int32 accumulators, shift requant)")
 
-# 4. fused Pallas pipeline ----------------------------------------------------
-logits_pl = R.pallas_forward(qp, cfg, jnp.asarray(batch["images"]))
+# 4. compile + serve the fused Pallas pipeline --------------------------------
+cm = C.compile_model(cfg, qp, backend="pallas", batch_sizes=(64,))
+logits_pl = cm(jnp.asarray(batch["images"]))
 exact = bool(np.array_equal(np.asarray(logits_pl), np.asarray(logits_int)))
-print(f"[pallas] fused kernel pipeline (stem + add-fold blocks) bit-exact "
-      f"with the integer graph: {exact}")
+print(f"[compile] pallas executable (stem + add-fold kernels per block) "
+      f"bit-exact with the integer graph: {exact}; {cm.stats()}")
+eng = ResNetEngine(cfg, qp, batch=8, backend="pallas")
+for i, img in enumerate(np.asarray(batch["images"][:12])):
+    eng.submit(ImageRequest(rid=i, image=img))
+eng.run()
+print(f"[serve] ResNetEngine served {eng.served} images in fixed batches "
+      f"through the compiled executable "
+      f"(traces per bucket: {eng.model.trace_counts})")
 
 # 5. FPGA throughput prediction ----------------------------------------------
 for plat, paper_fps in (("kv260", 30153), ("ultra96", 12971)):

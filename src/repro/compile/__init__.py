@@ -1,0 +1,18 @@
+"""``repro.compile`` — typed quantized-model API + graph-driven backend
+compiler for the serving path.
+
+    parse (core.graph builders) -> optimize (core.graph.optimize) ->
+    lower (compile.lowering + a registered Backend) ->
+    execute (compile.CompiledModel: fixed-shape AOT executables per bucket)
+
+See docs/serving.md for the end-to-end flow.
+"""
+from repro.compile.params import (                       # noqa: F401
+    QConvParams, QLinearParams, QBlockParams, QResNetParams, ensure_typed)
+from repro.compile.lowering import (                     # noqa: F401
+    LoweringError, LoweringPlan, StemTask, BlockTask, HeadTask,
+    model_graph, optimized_graph, plan_model)
+from repro.compile.backends import (                     # noqa: F401
+    Backend, register_backend, get_backend, list_backends)
+from repro.compile.compiler import (                     # noqa: F401
+    CompiledModel, compile_model, lower_forward)

@@ -1,0 +1,212 @@
+"""Backend registry: how a lowering plan becomes executable code.
+
+A ``Backend`` is the software analogue of the paper's HLS code generator: it
+takes the optimized graph + typed parameters and returns a callable computing
+logits from a float image batch.  Backends self-register via decorator —
+
+    @register_backend("my-backend")
+    class MyBackend:
+        def lower(self, g, cfg, params): ...
+
+— so adding an execution strategy never touches the engine or the compiler
+(`serve.ResNetEngine` historically switched backends with if/elif lambdas).
+
+Built-in backends, all lowering the SAME plan (``lowering.plan_model``):
+
+  * ``pallas``  — the fused kernel pipeline: ``conv_stem`` + one
+                  ``resblock_fused`` call per residual block (paper Fig. 13
+                  dataflow; feature maps touch HBM once per kernel boundary).
+  * ``lax-int`` — the reference integer graph on ``jax.lax`` convs: identical
+                  int32 accumulators and shift arithmetic, unfused dataflow.
+                  Bit-exact with ``pallas`` by construction.
+  * ``float``   — float emulation of the integer graph on the same pow2 grids
+                  (dequantized weights, fake-quantized activations): the
+                  quantization-error A/B reference, agrees with the integer
+                  backends to float rounding error, not bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.compile import lowering
+from repro.compile.params import QConvParams, QResNetParams
+
+# activation/input grids are model-level constants (models.resnet defines the
+# network); import the values, not the module, to keep the dependency thin
+from repro.models.resnet import A_SPEC, X_SPEC
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Lower an optimized graph + typed params into ``images -> logits``."""
+
+    name: str
+
+    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+        ...
+
+
+_REGISTRY: Dict[str, Backend] = {}
+_ALIASES = {"int": "lax-int"}   # legacy ResNetEngine name
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate and register a backend under ``name``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {list_backends()}")
+    return _REGISTRY[key]
+
+
+def list_backends():
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Shared integer arithmetic (one home, so bit-exactness cannot drift)
+# ---------------------------------------------------------------------------
+
+
+def _int_conv(xq, c: QConvParams, stride=1, acc_init=None):
+    """int8 x int8 -> int32 accumulator (+ int bias, + folded skip stream)."""
+    acc = jax.lax.conv_general_dilated(
+        xq.astype(jnp.int32), c.wq.astype(jnp.int32),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    acc = acc + c.bq.astype(jnp.int32)
+    if acc_init is not None:
+        acc = acc + acc_init
+    return acc
+
+
+def _relu_requant(acc, c: QConvParams, out_spec=A_SPEC):
+    return Q.requantize_shift(jnp.maximum(acc, 0), c.product_exp, out_spec)
+
+
+def _float_head(h_u8, fc):
+    """Dequantize the final feature map and run pool + classifier in float —
+    identical across integer backends (the paper's host-side tail)."""
+    pooled = jnp.mean(Q.dequantize(h_u8, A_SPEC), axis=(1, 2))
+    return pooled @ Q.dequantize(fc.wq, fc.w_spec) + fc.b
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+@register_backend("lax-int")
+class LaxIntBackend:
+    """Reference integer graph: lax convs, int32 accumulators, shift requant,
+    residual add folded into conv1's accumulator init."""
+
+    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+        plan = lowering.plan_model(g, params)
+
+        def forward(images):
+            xq = Q.quantize(images, X_SPEC)
+            h = _relu_requant(_int_conv(xq, params.stem), params.stem)
+            for task in plan.blocks:
+                blk = params.blocks[task.index]
+                y = _relu_requant(_int_conv(h, blk.conv0, task.stride),
+                                  blk.conv0)
+                sh = blk.shifts(A_SPEC.exp)["skip_shift"]
+                if task.has_ds:
+                    skip_q = Q.shift_align(
+                        _int_conv(h, blk.ds, task.stride), sh)
+                else:
+                    skip_q = Q.shift_align(h, sh)
+                h = _relu_requant(
+                    _int_conv(y, blk.conv1, 1, acc_init=skip_q), blk.conv1)
+            return _float_head(h, params.fc)
+
+        return forward
+
+
+@register_backend("pallas")
+class PallasBackend:
+    """Fused kernel pipeline: one ``conv_stem`` kernel, then one
+    ``resblock_fused`` kernel per residual block (conv0 + ReLU/requant +
+    optional 1x1 downsample + add-fold + conv1 + ReLU/requant, all in VMEM)."""
+
+    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+        from repro.kernels.conv_stem.ops import conv_stem_op
+        from repro.kernels.resblock_fused.ops import resblock_fused_op
+
+        plan = lowering.plan_model(g, params)
+
+        def forward(images):
+            xq = Q.quantize(images, X_SPEC)
+            st = params.stem
+            h = conv_stem_op(xq, st.wq, st.bq,
+                             shift=A_SPEC.exp - st.product_exp)
+            for task in plan.blocks:
+                blk = params.blocks[task.index]
+                sh = blk.shifts(A_SPEC.exp)
+                wd = bd = None
+                if task.has_ds:
+                    wd = blk.ds.wq
+                    bd = blk.ds.bq.astype(jnp.int32)
+                h = resblock_fused_op(
+                    h, blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
+                    blk.conv1.wq, blk.conv1.bq.astype(jnp.int32),
+                    wd, bd, stride=task.stride, **sh)
+            return _float_head(h, params.fc)
+
+        return forward
+
+
+@register_backend("float")
+class FloatBackend:
+    """Float emulation of the integer graph on the same pow2 grids: convs run
+    in float on dequantized weights, every activation is fake-quantized onto
+    its integer grid, and the skip stream is rounded onto conv1's product
+    grid.  Tracks the integer backends to float rounding error — the serving
+    A/B reference for quantization loss."""
+
+    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+        plan = lowering.plan_model(g, params)
+
+        def fconv(h, c: QConvParams, stride=1):
+            wf = Q.dequantize(c.wq, c.w_spec)
+            bf = Q.dequantize(c.bq, c.b_spec)
+            y = jax.lax.conv_general_dilated(
+                h, wf, window_strides=(stride, stride), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            return y + bf
+
+        def fq(x, spec):
+            return Q.dequantize(Q.quantize(x, spec), spec)
+
+        def forward(images):
+            h = fq(images, X_SPEC)
+            h = fq(jax.nn.relu(fconv(h, params.stem)), A_SPEC)
+            for task in plan.blocks:
+                blk = params.blocks[task.index]
+                y = fq(jax.nn.relu(fconv(h, blk.conv0, task.stride)), A_SPEC)
+                grid = Q.QSpec(32, True, blk.conv1.product_exp)
+                if task.has_ds:
+                    skip = fq(fconv(h, blk.ds, task.stride), grid)
+                else:
+                    skip = fq(h, grid)
+                z = fconv(y, blk.conv1, 1) + skip
+                h = fq(jax.nn.relu(z), A_SPEC)
+            pooled = jnp.mean(h, axis=(1, 2))
+            return pooled @ Q.dequantize(params.fc.wq, params.fc.w_spec) \
+                + params.fc.b
+
+        return forward

@@ -1,0 +1,155 @@
+"""Graph-driven lowering plan: optimized IR -> ordered fused tasks.
+
+The paper's flow is *parse -> optimize the graph -> generate the accelerator*.
+``core.graph.optimize`` performs the middle stage (fold_bn, merge_relu,
+loop_merge, temporal_reuse, add_fold); this module performs the front half of
+the last stage: it walks the **optimized** IR and extracts the task sequence a
+backend turns into executable code —
+
+  * ``StemTask``  — the stem conv with BN and ReLU folded in,
+  * ``BlockTask`` — one residual block as two fused conv tasks (conv0 with the
+    optional merged 1x1 downsample + skip stream, conv1 with the add folded
+    into its accumulator init),
+  * ``HeadTask``  — global average pool + classifier.
+
+The walk is strict: it *requires* the post-optimization invariants (no bn /
+relu / add nodes, every conv0 emits a skip stream, every conv1 consumes one)
+and raises ``LoweringError`` otherwise, so a backend can never silently
+compile the unoptimized dataflow.  Node->parameter binding uses the
+``role``/``block`` attrs stamped by ``core.graph.build_resnet_graph``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core import graph as G
+from repro.compile.params import QResNetParams
+
+
+class LoweringError(ValueError):
+    """The graph does not satisfy the optimized-IR invariants."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StemTask:
+    node: str                 # graph node name
+    och: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTask:
+    index: int                # block index (== params.blocks[index])
+    conv0: str                # graph node names, for provenance/debugging
+    conv1: str
+    stride: int
+    has_ds: bool              # 1x1 downsample merged into conv0 (loop_merge)
+    och: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadTask:
+    pool: str                 # pool kind ("avg")
+    num_classes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweringPlan:
+    stem: StemTask
+    blocks: List[BlockTask]
+    head: HeadTask
+
+
+def model_graph(cfg) -> G.Graph:
+    """The (unoptimized) IR for a ResNetConfig — what the paper parses from
+    the QONNX export."""
+    return G.build_resnet_graph(cfg.blocks_per_stage, cfg.base_width,
+                                cfg.img, cfg.num_classes)
+
+
+def optimized_graph(cfg) -> G.Graph:
+    return G.optimize(model_graph(cfg))
+
+
+def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPlan:
+    """Walk an optimized graph into the ordered task list.
+
+    When ``params`` is given, the plan is cross-checked against the parameter
+    containers (block count, downsample presence) so a graph/params mismatch
+    fails at compile time, not with silently wrong logits.
+    """
+    if any(n.op in ("bn", "relu", "add") for n in g.nodes):
+        raise LoweringError(
+            "graph still contains bn/relu/add nodes — run "
+            "core.graph.optimize() before lowering")
+
+    stem = None
+    blocks: List[BlockTask] = []
+    head_pool = head_fc = None
+    pending_conv0 = None
+
+    for n in g.nodes:
+        if n.op == "conv":
+            role = n.attrs.get("role")
+            if role == "stem":
+                if not {"bn", "relu"} <= set(n.fused):
+                    raise LoweringError(
+                        f"{n.name}: stem must have bn+relu folded in")
+                stem = StemTask(node=n.name, och=n.attrs["och"])
+            elif role == "conv0":
+                if pending_conv0 is not None:
+                    raise LoweringError(
+                        f"{n.name}: conv0 follows unpaired conv0 "
+                        f"{pending_conv0.name}")
+                if not n.skip_out:
+                    raise LoweringError(
+                        f"{n.name}: conv0 emits no skip stream — "
+                        "loop_merge/temporal_reuse did not run")
+                pending_conv0 = n
+            elif role == "conv1":
+                c0 = pending_conv0
+                if c0 is None or c0.attrs["block"] != n.attrs["block"]:
+                    raise LoweringError(f"{n.name}: conv1 without its conv0")
+                if n.skip_in is None or "add_fold" not in n.fused:
+                    raise LoweringError(
+                        f"{n.name}: residual add not folded into conv1")
+                if n.skip_in not in c0.outputs[1:]:
+                    raise LoweringError(
+                        f"{n.name}: skip input {n.skip_in!r} is not conv0's "
+                        f"forwarded stream {c0.outputs[1:]}")
+                blocks.append(BlockTask(
+                    index=n.attrs["block"], conv0=c0.name, conv1=n.name,
+                    stride=c0.attrs["stride"],
+                    has_ds=any(f.startswith("downsample:") for f in c0.fused),
+                    och=n.attrs["och"]))
+                pending_conv0 = None
+            elif role == "ds":
+                raise LoweringError(
+                    f"{n.name}: standalone downsample conv survived — "
+                    "loop_merge did not run")
+            else:
+                raise LoweringError(f"{n.name}: conv without a role attr")
+        elif n.op == "pool":
+            head_pool = n.attrs.get("kind", "avg")
+        elif n.op == "linear":
+            head_fc = n.attrs.get("dout")
+
+    if stem is None or head_pool is None or head_fc is None:
+        raise LoweringError("graph is missing stem / pool / classifier")
+    if pending_conv0 is not None:
+        raise LoweringError(f"unpaired conv0 {pending_conv0.name}")
+
+    plan = LoweringPlan(stem=stem, blocks=blocks,
+                        head=HeadTask(pool=head_pool, num_classes=head_fc))
+
+    if params is not None:
+        if len(params.blocks) != len(plan.blocks):
+            raise LoweringError(
+                f"graph has {len(plan.blocks)} residual blocks but params "
+                f"carry {len(params.blocks)}")
+        for t in plan.blocks:
+            if params.blocks[t.index].has_ds != t.has_ds:
+                raise LoweringError(
+                    f"block {t.index}: graph downsample={t.has_ds} but "
+                    f"params downsample={params.blocks[t.index].has_ds}")
+    return plan

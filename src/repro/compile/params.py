@@ -1,0 +1,182 @@
+"""Typed, pytree-registered quantized-parameter containers.
+
+`models.resnet.quantize_params` historically produced nested dicts keyed by
+magic strings (``qp["blocks"][i]["conv0"]["wq"]``).  These containers give the
+same data a typed spine the compiler can walk:
+
+  * ``QConvParams``   — one folded+quantized conv: int8 weights, int16 bias,
+                        and the three :class:`~repro.core.quant.QSpec` domains
+                        (weight, input activation, bias).  The specs are pytree
+                        *aux data* — static under ``jax.jit``, so a change of
+                        quantization grid recompiles while a change of weights
+                        does not.
+  * ``QLinearParams`` — the final classifier (int8 weights, float bias).
+  * ``QBlockParams``  — one residual block: conv0, conv1, optional downsample.
+  * ``QResNetParams`` — the whole network; ``from_dict``/``to_dict`` adapt the
+                        legacy dict layout both ways (bit-identical arrays).
+
+Every container is a frozen dataclass registered as a pytree node, so the
+whole parameter set can be mapped, donated, sharded, or closed over by a
+jitted executable exactly like any other JAX pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QSpec
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QConvParams:
+    """One quantized conv task: ``acc = conv(x, wq) + bq`` in int32, with the
+    product domain at exponent ``x_spec.exp + w_spec.exp`` (= ``b_spec.exp``)."""
+
+    wq: jnp.ndarray             # (fh, fw, ich, och) int8
+    bq: jnp.ndarray             # (och,) int16 at s_b = s_x + s_w
+    w_spec: QSpec
+    x_spec: QSpec
+    b_spec: QSpec
+
+    @property
+    def product_exp(self) -> int:
+        """Exponent of the int32 accumulator domain (s_x + s_w)."""
+        return self.x_spec.exp + self.w_spec.exp
+
+    def tree_flatten(self):
+        return (self.wq, self.bq), (self.w_spec, self.x_spec, self.b_spec)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QConvParams":
+        return cls(wq=d["wq"], bq=d["bq"], w_spec=d["w_spec"],
+                   x_spec=d["x_spec"], b_spec=d["b_spec"])
+
+    def to_dict(self) -> dict:
+        return dict(wq=self.wq, bq=self.bq, w_spec=self.w_spec,
+                    x_spec=self.x_spec, b_spec=self.b_spec)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QLinearParams:
+    """The classifier head: int8 weights, float bias (the tail runs in float,
+    identical to the paper's host-side final layer)."""
+
+    wq: jnp.ndarray             # (din, dout) int8
+    b: jnp.ndarray              # (dout,) float32
+    w_spec: QSpec
+
+    def tree_flatten(self):
+        return (self.wq, self.b), (self.w_spec,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QLinearParams":
+        return cls(wq=d["wq"], b=d["b"], w_spec=d["w_spec"])
+
+    def to_dict(self) -> dict:
+        return dict(wq=self.wq, b=self.b, w_spec=self.w_spec)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QBlockParams:
+    """One residual block after graph optimization: two fused conv tasks and,
+    for stage-entry blocks, the 1x1 downsample merged into conv0's task."""
+
+    conv0: QConvParams
+    conv1: QConvParams
+    ds: Optional[QConvParams] = None
+
+    @property
+    def has_ds(self) -> bool:
+        return self.ds is not None
+
+    def shifts(self, a_exp: int) -> dict:
+        """Static pow2 shifts for the fused kernels (``a_exp`` = the
+        activation-grid exponent, ``models.resnet.A_SPEC.exp``):
+        shift0/shift1 requantize each conv's product domain back to the
+        activation grid; skip_shift aligns the skip stream into conv1's
+        product domain (the add-fold accumulator init)."""
+        out = dict(shift0=a_exp - self.conv0.product_exp,
+                   shift1=a_exp - self.conv1.product_exp)
+        if self.ds is not None:
+            out["skip_shift"] = self.ds.product_exp - self.conv1.product_exp
+        else:
+            out["skip_shift"] = a_exp - self.conv1.product_exp
+        return out
+
+    def tree_flatten(self):
+        return (self.conv0, self.conv1, self.ds), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "QBlockParams":
+        return cls(conv0=QConvParams.from_dict(d["conv0"]),
+                   conv1=QConvParams.from_dict(d["conv1"]),
+                   ds=QConvParams.from_dict(d["ds"]) if "ds" in d else None)
+
+    def to_dict(self) -> dict:
+        out = dict(conv0=self.conv0.to_dict(), conv1=self.conv1.to_dict())
+        if self.ds is not None:
+            out["ds"] = self.ds.to_dict()
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QResNetParams:
+    """The full quantized network, in graph order: stem, residual blocks,
+    classifier."""
+
+    stem: QConvParams
+    blocks: Tuple[QBlockParams, ...]
+    fc: QLinearParams
+
+    def tree_flatten(self):
+        return (self.stem, self.blocks, self.fc), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        stem, blocks, fc = children
+        return cls(stem, tuple(blocks), fc)
+
+    @classmethod
+    def from_dict(cls, qp: dict) -> "QResNetParams":
+        """Adapter from the legacy ``quantize_params`` nested-dict layout."""
+        return cls(stem=QConvParams.from_dict(qp["stem"]),
+                   blocks=tuple(QBlockParams.from_dict(b)
+                                for b in qp["blocks"]),
+                   fc=QLinearParams.from_dict(qp["fc"]))
+
+    def to_dict(self) -> dict:
+        return dict(stem=self.stem.to_dict(),
+                    blocks=[b.to_dict() for b in self.blocks],
+                    fc=self.fc.to_dict())
+
+
+def ensure_typed(qparams) -> QResNetParams:
+    """Accept either the legacy dict layout or a typed container."""
+    if isinstance(qparams, QResNetParams):
+        return qparams
+    if isinstance(qparams, dict):
+        return QResNetParams.from_dict(qparams)
+    raise TypeError(
+        f"expected QResNetParams or a quantize_params() dict, got "
+        f"{type(qparams).__name__}")

@@ -261,17 +261,22 @@ def skip_buffer_report(g_before: Graph, g_after: Graph) -> List[dict]:
 # ---------------------------------------------------------------------------
 
 
-def _conv(name, tin, tout, ich, och, iw, ih, fh=3, fw=3, stride=1):
+def _conv(name, tin, tout, ich, och, iw, ih, fh=3, fw=3, stride=1,
+          role=None, block=None):
+    """``role``/``block`` bind a conv node to its parameter container slot
+    (stem | conv0 | conv1 | ds, block index) — the handle ``repro.compile``'s
+    lowering uses to fetch weights for each fused task."""
     return Node(name, "conv", [tin], [tout],
                 dict(ich=ich, och=och, iw=iw, ih=ih, fh=fh, fw=fw, stride=stride,
-                     ow=iw // stride, oh=ih // stride))
+                     ow=iw // stride, oh=ih // stride, role=role, block=block))
 
 
 def build_resnet_graph(num_blocks_per_stage: int, base_width: int = 16,
-                       img: int = 32) -> Graph:
+                       img: int = 32, num_classes: int = 10) -> Graph:
     """CIFAR ResNet family (ResNet8: 1 block/stage; ResNet20: 3 blocks/stage)."""
     nodes = [Node("input", "input", ["%in"], ["t0"])]
-    nodes.append(_conv("stem", "t0", "t1", 3, base_width, img, img))
+    nodes.append(_conv("stem", "t0", "t1", 3, base_width, img, img,
+                       role="stem"))
     nodes.append(Node("stem_bn", "bn", ["t1"], ["t1b"]))
     nodes.append(Node("stem_relu", "relu", ["t1b"], ["t1r"]))
     tin, ich, res, idx = "t1r", base_width, img, 0
@@ -282,16 +287,18 @@ def build_resnet_graph(num_blocks_per_stage: int, base_width: int = 16,
             ow = res // stride
             t0 = f"s{stage}b{b}c0"
             nodes.append(_conv(f"conv{idx}_0", tin, t0, ich, och, res, res,
-                               stride=stride))
+                               stride=stride, role="conv0", block=idx))
             nodes.append(Node(f"bn{idx}_0", "bn", [t0], [t0 + "b"]))
             nodes.append(Node(f"relu{idx}_0", "relu", [t0 + "b"], [t0 + "r"]))
             t1 = f"s{stage}b{b}c1"
-            nodes.append(_conv(f"conv{idx}_1", t0 + "r", t1, och, och, ow, ow))
+            nodes.append(_conv(f"conv{idx}_1", t0 + "r", t1, och, och, ow, ow,
+                               role="conv1", block=idx))
             nodes.append(Node(f"bn{idx}_1", "bn", [t1], [t1 + "b"]))
             if stride != 1 or ich != och:
                 ds = f"s{stage}b{b}ds"
                 nodes.append(_conv(f"ds{idx}", tin, ds, ich, och, res, res,
-                                   fh=1, fw=1, stride=stride))
+                                   fh=1, fw=1, stride=stride, role="ds",
+                                   block=idx))
                 skip = ds
             else:
                 skip = tin
@@ -302,7 +309,8 @@ def build_resnet_graph(num_blocks_per_stage: int, base_width: int = 16,
             idx += 1
     nodes.append(Node("pool", "pool", [tin], ["tp"],
                       dict(kind="avg", ih=res, iw=res, ich=ich)))
-    nodes.append(Node("fc", "linear", ["tp"], ["logits"], dict(din=ich, dout=10)))
+    nodes.append(Node("fc", "linear", ["tp"], ["logits"],
+                      dict(din=ich, dout=num_classes, role="fc")))
     nodes.append(Node("output", "output", ["logits"], []))
     return Graph(nodes)
 

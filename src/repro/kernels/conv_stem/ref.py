@@ -6,7 +6,7 @@ from repro.kernels.common import requant_u8
 
 
 def conv_stem_ref(x, w, b, *, shift):
-    """x: (N,H,W,Cin) uint8 unpadded; mirrors models.resnet._int_conv +
+    """x: (N,H,W,Cin) uint8 unpadded; mirrors compile.backends._int_conv +
     _relu_requant for the stem layer."""
     acc = jax.lax.conv_general_dilated(
         x.astype(jnp.int32), w.astype(jnp.int32), (1, 1), "SAME",

@@ -1,7 +1,15 @@
-"""Serving launcher: batched decode with the continuous-batching engine.
+"""Serving launcher: LM continuous batching or compiled ResNet image serving.
+
+LM workload (continuous-batching Engine):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
         --requests 8 --max-new 16
+
+Image-classification workload (the paper's networks through repro.compile —
+the optimized graph lowered once per batch bucket, served by ResNetEngine):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet8 \
+        --backend pallas --requests 64 --batch 8 --buckets 1,8
 """
 from __future__ import annotations
 
@@ -9,21 +17,16 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
-from repro.configs import base as cbase
-from repro.models import model as M
-from repro.serve.engine import Engine, Request
+RESNET_ARCHS = ("resnet8", "resnet20")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+def serve_lm(args):
+    from repro.configs import base as cbase
+    from repro.models import model as M
+    from repro.serve.engine import Engine, Request
+
     cfg = (cbase.get_smoke_config(args.arch) if args.smoke
            else cbase.get_config(args.arch))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -40,6 +43,64 @@ def main():
           f"{dt:.2f}s ({tokens/dt:.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: {r.out[:10]}")
+
+
+def serve_resnet(args):
+    from repro.models import resnet as R
+    from repro.serve.engine import ImageRequest, ResNetEngine
+
+    cfg = {"resnet8": R.RESNET8, "resnet20": R.RESNET20}[args.arch]
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    qp = R.quantize_params(R.fold_params(params), cfg)
+    buckets = tuple(int(b) for b in args.buckets.split(",")) if args.buckets \
+        else (args.batch,)
+    eng = ResNetEngine(cfg, qp, batch=args.batch, backend=args.backend,
+                       batch_sizes=buckets,
+                       ab_backends=tuple(
+                           b for b in args.ab.split(",") if b) if args.ab
+                       else ())
+    # warm every bucket of the primary and the A/B shadows so the timing
+    # below is serve-only
+    eng.model.warmup()
+    for shadow in eng.shadows.values():
+        shadow.warmup()
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(ImageRequest(
+            rid=i, image=rng.random((cfg.img, cfg.img, 3), np.float32)))
+    t0 = time.time()
+    ticks = eng.run()
+    dt = time.time() - t0
+    print(f"served {eng.served} images in {ticks} ticks, {dt:.2f}s "
+          f"({eng.served/dt:.1f} img/s) via backend={args.backend!r}")
+    print(f"  compiled: {eng.model.stats()}")
+    for name, devs in eng.ab_stats.items():
+        print(f"  A/B vs {name}: max|Δlogit| = {max(devs):.3g} "
+              f"over {len(devs)} ticks")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="resnet: max images per tick")
+    ap.add_argument("--buckets", default="",
+                    help="resnet: comma-separated compiled batch buckets "
+                         "(default: just --batch)")
+    ap.add_argument("--backend", default="pallas",
+                    help="resnet: a repro.compile registered backend")
+    ap.add_argument("--ab", default="",
+                    help="resnet: comma-separated shadow backends to A/B")
+    args = ap.parse_args()
+    if args.arch in RESNET_ARCHS:
+        serve_resnet(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

@@ -251,56 +251,18 @@ def quantize_params(folded, cfg: ResNetConfig) -> dict:
     return out
 
 
-def _int_conv(xq, qc, stride=1, acc_init=None):
-    """int8 activations x int8 weights -> int32 accumulator (+ bias, + folded
-    skip stream), exactly as the DSP pipeline computes it."""
-    acc = jax.lax.conv_general_dilated(
-        xq.astype(jnp.int32), qc["wq"].astype(jnp.int32),
-        window_strides=(stride, stride), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        preferred_element_type=jnp.int32)
-    acc = acc + qc["bq"].astype(jnp.int32)
-    if acc_init is not None:
-        acc = acc + acc_init
-    return acc
-
-
-def _relu_requant(acc, qc, out_spec=A_SPEC):
-    acc = jnp.maximum(acc, 0)
-    from_exp = qc["x_spec"].exp + qc["w_spec"].exp
-    return Q.requantize_shift(acc, from_exp, out_spec)
-
-
-def _requant(acc, qc, out_spec):
-    from_exp = qc["x_spec"].exp + qc["w_spec"].exp
-    return Q.requantize_shift(acc, from_exp, out_spec)
-
-
 def int_forward(qparams, cfg: ResNetConfig, images):
     """Pure-integer inference (float ops only at the final classifier).
 
     The residual add never exists as a node: the skip stream (requantized to
-    the product domain of conv1) initializes conv1's int32 accumulator."""
-    xq = Q.quantize(images, X_SPEC)  # uint8 feature map
-    acc = _int_conv(xq, qparams["stem"])
-    h = _relu_requant(acc, qparams["stem"])
-    for qb, stride in zip(qparams["blocks"], block_strides(cfg)):
-        acc0 = _int_conv(h, qb["conv0"], stride)
-        y = _relu_requant(acc0, qb["conv0"])
-        sh = block_shifts(qb)["skip_shift"]
-        if "ds" in qb:
-            # align the ds product domain to conv1's product domain (shift)
-            skip_q = Q.shift_align(_int_conv(h, qb["ds"], stride), sh)
-        else:
-            # re-quantize the skip stream into conv1's product domain so it
-            # can initialize the accumulator (pure shift, either direction)
-            skip_q = Q.shift_align(h, sh)
-        acc1 = _int_conv(y, qb["conv1"], 1, acc_init=skip_q)
-        h = _relu_requant(acc1, qb["conv1"])
-    hf = Q.dequantize(h, A_SPEC)
-    pooled = jnp.mean(hf, axis=(1, 2))
-    wf = Q.dequantize(qparams["fc"]["wq"], qparams["fc"]["w_spec"])
-    return pooled @ wf + qparams["fc"]["b"]
+    the product domain of conv1) initializes conv1's int32 accumulator.
+
+    Thin compatibility wrapper over ``repro.compile``'s ``lax-int`` backend —
+    the arithmetic lives in one place (``compile.backends``), driven by the
+    optimized graph IR, so bit-exactness with the compiled serving path holds
+    by construction."""
+    from repro.compile import lower_forward
+    return lower_forward(cfg, qparams, backend="lax-int")(images)
 
 
 # ---------------------------------------------------------------------------
@@ -336,25 +298,10 @@ def pallas_forward(qparams, cfg: ResNetConfig, images):
     VMEM for the kernel's lifetime (paper Fig. 13).  Feature maps touch HBM
     exactly once per kernel boundary.  Bit-exact with ``int_forward``
     (asserted in tests/test_pallas_forward.py); float ops only at the final
-    average-pool + classifier, identical to int_forward's tail."""
-    from repro.kernels.conv_stem.ops import conv_stem_op
-    from repro.kernels.resblock_fused.ops import resblock_fused_op
+    average-pool + classifier, identical to int_forward's tail.
 
-    xq = Q.quantize(images, X_SPEC)  # uint8 feature map
-    st = qparams["stem"]
-    stem_shift = A_SPEC.exp - (st["x_spec"].exp + st["w_spec"].exp)
-    h = conv_stem_op(xq, st["wq"], st["bq"], shift=stem_shift)
-    for qb, stride in zip(qparams["blocks"], block_strides(cfg)):
-        sh = block_shifts(qb)
-        wd = bd = None
-        if "ds" in qb:
-            wd = qb["ds"]["wq"]
-            bd = qb["ds"]["bq"].astype(jnp.int32)
-        h = resblock_fused_op(
-            h, qb["conv0"]["wq"], qb["conv0"]["bq"].astype(jnp.int32),
-            qb["conv1"]["wq"], qb["conv1"]["bq"].astype(jnp.int32),
-            wd, bd, stride=stride, **sh)
-    hf = Q.dequantize(h, A_SPEC)
-    pooled = jnp.mean(hf, axis=(1, 2))
-    wf = Q.dequantize(qparams["fc"]["wq"], qparams["fc"]["w_spec"])
-    return pooled @ wf + qparams["fc"]["b"]
+    Thin compatibility wrapper over ``repro.compile``'s ``pallas`` backend —
+    the kernel sequencing is derived from the optimized graph IR in
+    ``compile.backends.PallasBackend``."""
+    from repro.compile import lower_forward
+    return lower_forward(cfg, qparams, backend="pallas")(images)

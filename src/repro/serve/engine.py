@@ -9,9 +9,11 @@ simplicity at test scale; the prefill_32k cell exercises the real batched
 prefill path).
 
 ``ResNetEngine`` serves the paper's own workload — integer ResNet8/20 image
-classification — with the fused Pallas pipeline (models.resnet.pallas_forward)
-as the default backend: every residual block runs through the add-fold kernel,
-so serving traffic takes the minimum-HBM-traffic path by default.
+classification — entirely through ``repro.compile.CompiledModel``: the
+optimized graph is lowered once per (backend, batch bucket) into fixed-shape
+AOT executables, with the fused Pallas pipeline as the default backend, so
+serving traffic takes the minimum-HBM-traffic path with zero per-tick
+retracing.
 """
 from __future__ import annotations
 
@@ -56,6 +58,13 @@ class Engine:
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
+                if not req.prompt:
+                    # empty prompt: nothing to prefill (and no logits to seed
+                    # from) — start decoding from token 0 at position 0 on
+                    # the next tick
+                    self.pos[i] = 0
+                    self.last_tok[i, 0] = 0
+                    continue
                 # prefill token-by-token into this slot's cache
                 for j, tok in enumerate(req.prompt):
                     t = self.last_tok.copy()
@@ -119,42 +128,60 @@ class ImageRequest:
 
 
 class ResNetEngine:
-    """Fixed-batch image-classification engine.
+    """Image-classification engine serving entirely through
+    :class:`repro.compile.CompiledModel`.
 
-    Queued requests are drained in arrival order into fixed-size batches
-    (short batches are zero-padded so every tick hits the same compiled
-    executable — no shape-polymorphic recompiles on the serving path) and run
-    through one of three interchangeable backends over the same quantized
-    parameter set:
+    ``compile_model`` lowers the optimized graph once per (backend, batch
+    bucket) into fixed-shape AOT executables; the engine then only *selects a
+    bucket, zero-pads, and runs* — no retracing ever happens on a tick (the
+    model's ``trace_counts`` stay at 1 per bucket, asserted in
+    tests/test_serve.py).  Backends come from the ``repro.compile`` registry:
 
-      * ``pallas`` (default) — models.resnet.pallas_forward, the fused
-        integer pipeline: stem kernel + one add-fold kernel per block.
-      * ``int``    — models.resnet.int_forward, the lax reference integer
-        graph (bit-identical logits, unfused dataflow).
-      * ``float``  — models.resnet.forward on QAT float params, for A/B'ing
-        quantization error in production (requires ``params``).
+      * ``pallas`` (default) — the fused integer kernel pipeline (stem kernel
+        + one add-fold kernel per residual block).
+      * ``lax-int`` (alias ``int``) — the lax reference integer graph,
+        bit-identical logits, unfused dataflow.
+      * ``float`` — float emulation of the integer graph on the same pow2
+        grids, for A/B'ing quantization error in production.
+
+    ``ab_backends`` compiles shadow models on additional backends; every tick
+    the primary batch is replayed through each shadow and the max absolute
+    logit deviation is recorded in ``ab_stats`` — a live parity probe for
+    canarying a new backend against the serving one.
     """
 
     def __init__(self, cfg, qparams, batch: int = 8, backend: str = "pallas",
-                 params=None):
-        from repro.models import resnet as RN
+                 params=None, batch_sizes=None, ab_backends=()):
+        from repro.compile import compile_model
 
-        self.cfg, self.qparams, self.batch = cfg, qparams, batch
+        del params  # legacy arg; the float backend is now self-contained
+        self.cfg, self.batch = cfg, batch
         self.backend = backend
+        if batch_sizes is None:
+            batch_sizes = (batch,)
+        if batch not in batch_sizes:
+            raise ValueError(
+                f"max batch {batch} must be one of batch_sizes {batch_sizes}")
+        self.model = compile_model(cfg, qparams, backend=backend,
+                                   batch_sizes=batch_sizes)
+        self.qparams = self.model.params
+        self.shadows = {name: compile_model(cfg, qparams, backend=name,
+                                            batch_sizes=batch_sizes)
+                        for name in ab_backends}
+        self.ab_stats = {name: [] for name in self.shadows}
         self.queue: List[ImageRequest] = []
         self.served = 0
-        if backend == "pallas":
-            self._fwd = lambda x: RN.pallas_forward(qparams, cfg, x)
-        elif backend == "int":
-            self._fwd = lambda x: RN.int_forward(qparams, cfg, x)
-        elif backend == "float":
-            if params is None:
-                raise ValueError("backend='float' needs the QAT params")
-            self._fwd = lambda x: RN.forward(params, cfg, x, train=False)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
 
     def submit(self, req: ImageRequest):
+        """Enqueue one request.  Shape is validated here — every compiled
+        executable is fixed-shape, so a mismatched image can never be
+        batched; rejecting at submit keeps ``tick`` total."""
+        expect = (self.cfg.img, self.cfg.img, 3)
+        shape = tuple(np.shape(req.image))
+        if shape != expect:
+            raise ValueError(
+                f"request {req.rid}: image shape {shape} does not match the "
+                f"compiled input shape {expect} for {self.cfg.name}")
         self.queue.append(req)
 
     def tick(self) -> bool:
@@ -163,10 +190,11 @@ class ResNetEngine:
             return False
         reqs = self.queue[:self.batch]
         del self.queue[:len(reqs)]
-        imgs = np.zeros((self.batch,) + reqs[0].image.shape, np.float32)
-        for i, r in enumerate(reqs):
-            imgs[i] = r.image
-        logits = np.asarray(self._fwd(jnp.asarray(imgs)))
+        imgs = np.stack([np.asarray(r.image, np.float32) for r in reqs])
+        logits = np.asarray(self.model(imgs))
+        for name, shadow in self.shadows.items():
+            dev = np.max(np.abs(np.asarray(shadow(imgs)) - logits))
+            self.ab_stats[name].append(float(dev))
         for i, r in enumerate(reqs):
             r.logits = logits[i]
             r.label = int(np.argmax(logits[i]))

@@ -1,0 +1,226 @@
+"""repro.compile: typed parameter containers, graph-driven lowering, backend
+registry, and the compiled-executable contract (bit-exactness, buckets,
+padding, zero retracing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compile as C
+from repro.core import graph as G
+from repro.models import resnet as R
+
+
+def _qparams(cfg, seed):
+    params = R.init_params(cfg, jax.random.PRNGKey(seed))
+    return R.quantize_params(R.fold_params(params), cfg)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.uniform(jax.random.PRNGKey(0), (4, 32, 32, 3),
+                              minval=0.0, maxval=0.999)
+
+
+@pytest.fixture(scope="module")
+def qp8():
+    return _qparams(R.RESNET8, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# typed parameter containers
+# ---------------------------------------------------------------------------
+
+
+def test_from_dict_to_dict_roundtrip_is_bit_identical(qp8):
+    tp = C.QResNetParams.from_dict(qp8)
+    rt = tp.to_dict()
+    flat_a = jax.tree_util.tree_leaves(qp8)
+    flat_b = jax.tree_util.tree_leaves(rt)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # structure round-trips too: ds present exactly where the dict had it
+    assert [b.has_ds for b in tp.blocks] == \
+        ["ds" in b for b in qp8["blocks"]]
+
+
+def test_typed_params_are_a_pytree_with_static_specs(qp8):
+    tp = C.QResNetParams.from_dict(qp8)
+    leaves = jax.tree_util.tree_leaves(tp)
+    # every leaf is an array — QSpecs ride as aux data, not leaves
+    assert all(hasattr(l, "dtype") for l in leaves)
+    doubled = jax.tree_util.tree_map(lambda x: x, tp)
+    assert isinstance(doubled, C.QResNetParams)
+    assert doubled.stem.w_spec == tp.stem.w_spec      # aux survives the map
+    assert doubled.blocks[0].conv0.x_spec == tp.blocks[0].conv0.x_spec
+
+
+def test_block_shifts_match_models_resnet(qp8):
+    tp = C.QResNetParams.from_dict(qp8)
+    for qb, blk in zip(qp8["blocks"], tp.blocks):
+        assert blk.shifts(R.A_SPEC.exp) == R.block_shifts(qb)
+
+
+def test_ensure_typed_accepts_both_and_rejects_junk(qp8):
+    tp = C.ensure_typed(qp8)
+    assert isinstance(tp, C.QResNetParams)
+    assert C.ensure_typed(tp) is tp
+    with pytest.raises(TypeError):
+        C.ensure_typed([1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# lowering: optimized IR -> plan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg,n_blocks", [(R.RESNET8, 3), (R.RESNET20, 9)])
+def test_plan_model_walks_the_optimized_graph(cfg, n_blocks):
+    plan = C.plan_model(C.optimized_graph(cfg))
+    assert len(plan.blocks) == n_blocks
+    assert plan.stem.och == cfg.base_width
+    assert plan.head.num_classes == cfg.num_classes
+    # stage-entry blocks (after stage 0) are the strided/downsample ones
+    strides = [t.stride for t in plan.blocks]
+    has_ds = [t.has_ds for t in plan.blocks]
+    assert strides == R.block_strides(cfg)
+    assert has_ds == [s == 2 for s in strides]
+    # tasks arrive in graph (execution) order
+    assert [t.index for t in plan.blocks] == list(range(n_blocks))
+
+
+def test_plan_model_rejects_unoptimized_graph():
+    with pytest.raises(C.LoweringError, match="optimize"):
+        C.plan_model(C.model_graph(R.RESNET8))
+
+
+def test_plan_model_rejects_partially_optimized_graph():
+    g = C.model_graph(R.RESNET8)
+    g = G.merge_relu(G.fold_bn(g))   # bn/relu folded but residuals untouched
+    with pytest.raises(C.LoweringError):
+        C.plan_model(g)
+
+
+def test_plan_model_cross_checks_params(qp8):
+    tp = C.QResNetParams.from_dict(qp8)
+    bad = dataclasses.replace(tp, blocks=tp.blocks[:-1])
+    with pytest.raises(C.LoweringError, match="blocks"):
+        C.plan_model(C.optimized_graph(R.RESNET8), bad)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    assert {"pallas", "lax-int", "float"} <= set(C.list_backends())
+    assert C.get_backend("pallas").name == "pallas"
+    assert C.get_backend("int").name == "lax-int"     # legacy engine alias
+
+
+def test_register_backend_decorator():
+    @C.register_backend("test-null")
+    class NullBackend:
+        def lower(self, g, cfg, params):
+            return lambda images: jnp.zeros((images.shape[0],
+                                             cfg.num_classes))
+
+    try:
+        assert "test-null" in C.list_backends()
+        cm = C.compile_model(R.RESNET8, _qparams(R.RESNET8, 0),
+                             backend="test-null", batch_sizes=(2,))
+        out = cm(jnp.ones((2, 32, 32, 3)))
+        assert out.shape == (2, 10) and not np.any(np.asarray(out))
+    finally:
+        from repro.compile import backends as B
+        B._REGISTRY.pop("test-null", None)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="registered"):
+        C.get_backend("hexagon")
+
+
+# ---------------------------------------------------------------------------
+# compile_model: the executable contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [R.RESNET8, R.RESNET20],
+                         ids=lambda c: c.name)
+@pytest.mark.slow
+def test_compiled_pallas_bit_exact_with_int_forward(cfg, images):
+    """Acceptance: compile_model(cfg, qp, backend='pallas')(imgs) equals
+    int_forward on ResNet8 and ResNet20, bit for bit."""
+    qp = _qparams(cfg, seed=2)
+    ref = R.int_forward(qp, cfg, images)
+    cm = C.compile_model(cfg, qp, backend="pallas",
+                         batch_sizes=(images.shape[0],))
+    np.testing.assert_array_equal(np.asarray(cm(images)), np.asarray(ref))
+
+
+def test_compiled_lax_int_matches_int_forward(qp8, images):
+    cfg = R.RESNET8
+    ref = R.int_forward(qp8, cfg, images)
+    cm = C.compile_model(cfg, qp8, backend="lax-int", batch_sizes=(4,))
+    np.testing.assert_array_equal(np.asarray(cm(images)), np.asarray(ref))
+
+
+def test_float_backend_tracks_integer_backend(qp8, images):
+    cfg = R.RESNET8
+    ref = np.asarray(R.int_forward(qp8, cfg, images))
+    cm = C.compile_model(cfg, qp8, backend="float", batch_sizes=(4,))
+    np.testing.assert_allclose(np.asarray(cm(images)), ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_bucket_selection_padding_and_chunking(qp8, images):
+    cfg = R.RESNET8
+    cm = C.compile_model(cfg, qp8, backend="lax-int", batch_sizes=(2, 4))
+    assert cm.bucket_for(1) == 2 and cm.bucket_for(2) == 2
+    assert cm.bucket_for(3) == 4 and cm.bucket_for(9) == 4
+    ref = np.asarray(R.int_forward(qp8, cfg, images))
+    # short batch: padded to bucket 2, padding rows discarded
+    np.testing.assert_array_equal(np.asarray(cm(images[:1])), ref[:1])
+    assert sorted(cm._execs) == [2]
+    # 3 rows selects bucket 4
+    np.testing.assert_array_equal(np.asarray(cm(images[:3])), ref[:3])
+    assert sorted(cm._execs) == [2, 4]
+    # oversized batch is chunked through the largest bucket
+    big = jnp.concatenate([images, images[:1]], axis=0)   # 5 rows
+    out = np.asarray(cm(big))
+    np.testing.assert_array_equal(out[:4], ref)
+    np.testing.assert_array_equal(out[4:], ref[:1])
+
+
+def test_no_retracing_across_repeated_calls(qp8, images):
+    cfg = R.RESNET8
+    cm = C.compile_model(cfg, qp8, backend="lax-int", batch_sizes=(4,))
+    for _ in range(5):
+        cm(images)
+    assert cm.trace_counts == {4: 1}
+    assert cm.compile_count == 1
+    assert cm.executable(4) is cm.executable(4)   # one executable, reused
+
+
+def test_eager_warmup_compiles_every_bucket(qp8):
+    cfg = R.RESNET8
+    cm = C.compile_model(cfg, qp8, backend="lax-int", batch_sizes=(1, 2),
+                         eager=True)
+    assert cm.compile_count == 2 and sorted(cm._execs) == [1, 2]
+
+
+def test_compile_model_rejects_bad_buckets(qp8):
+    with pytest.raises(ValueError):
+        C.compile_model(R.RESNET8, qp8, backend="lax-int", batch_sizes=())
+    with pytest.raises(ValueError):
+        C.compile_model(R.RESNET8, qp8, backend="lax-int", batch_sizes=(0,))
+    cm = C.compile_model(R.RESNET8, qp8, backend="lax-int", batch_sizes=(2,))
+    with pytest.raises(ValueError, match="bucket"):
+        cm.executable(3)
+    with pytest.raises(ValueError, match="empty"):
+        cm(jnp.zeros((0, 32, 32, 3)))
