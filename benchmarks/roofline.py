@@ -23,7 +23,13 @@ SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
 def _key(d):
-    return (ARCH_ORDER.index(d["arch"]), SHAPE_ORDER.index(d["shape"]))
+    """Sort by the canonical table order; archs/shapes not in the canonical
+    lists (e.g. the resnet rows) sort after the known ones, alphabetically,
+    instead of crashing ``.index()``."""
+    arch, shape = d.get("arch", ""), d.get("shape", "")
+    ai = ARCH_ORDER.index(arch) if arch in ARCH_ORDER else len(ARCH_ORDER)
+    si = SHAPE_ORDER.index(shape) if shape in SHAPE_ORDER else len(SHAPE_ORDER)
+    return (ai, si, arch, shape)
 
 
 def table(rows, analytic=True):

@@ -17,6 +17,9 @@ so the perf trajectory is machine-trackable across PRs.  Benchmarks:
   * e2e_pallas      — whole-network inference through ``repro.compile``:
                       compiled pallas vs compiled lax-int executables (FPS,
                       bit-exactness, modeled per-block HBM-traffic saving)
+  * e2e_tuned       — the autotuned pipeline (``repro.tune`` two-stage
+                      search) vs the default config: FPS + speedup, the
+                      chosen KernelConfig per task, cache hit/miss counts
   * kernels_micro   — per-kernel wall time (interpret mode on CPU; TPU is
                       the target, numbers are correctness-path timings)
   * roofline        — reads results/dryrun/*.json (launch.dryrun) and prints
@@ -165,6 +168,54 @@ def e2e_pallas():
              retraces=max(cm_p.trace_counts.values()))
 
 
+def e2e_tuned():
+    """The tuned pipeline vs the default config: ``repro.tune.search`` (two
+    stages — analytic ranking, then timing the top-K real executables, the
+    default always among them) picks a per-task ``KernelConfig``; the row
+    reports tuned FPS, default FPS, the speedup, the chosen config per task,
+    and the config-cache hit/miss counts so a perf change is attributable to
+    a config change."""
+    print("\n## e2e_tuned — autotuned compiled inference vs default config")
+    print("name,us_per_call,derived")
+    from repro import tune as T
+    from repro.compile import compile_model
+    from repro.models import resnet as R
+    batch = 4
+    imgs = jax.random.uniform(jax.random.PRNGKey(0), (batch, 32, 32, 3),
+                              minval=0.0, maxval=0.999)
+    cache = T.TuneCache()          # honors REPRO_TUNE_CACHE
+    for cfg in (R.RESNET8, R.RESNET20):
+        params = R.init_params(cfg, jax.random.PRNGKey(1))
+        qp = R.quantize_params(R.fold_params(params), cfg)
+        t0 = time.perf_counter()
+        res = T.search(cfg, qp, backend="pallas", batch=batch, top_k=2,
+                       device=True, reps=3, cache=cache)
+        search_us = (time.perf_counter() - t0) * 1e6
+        cm_t = compile_model(cfg, qp, backend="pallas", batch_sizes=(batch,),
+                             tune=res.tuning)
+        cm_d = compile_model(cfg, qp, backend="pallas", batch_sizes=(batch,))
+        cm_i = compile_model(cfg, qp, backend="lax-int", batch_sizes=(batch,))
+        exact = bool(np.array_equal(np.asarray(cm_t(imgs)),
+                                    np.asarray(cm_i(imgs))))
+        if all(not c.to_dict() for c in res.tuning.values()):
+            # the search kept the default config: tuned and default are the
+            # same executable — re-timing them separately would only report
+            # host noise as a "speedup"
+            us_t = us_d = _time(lambda: cm_t(imgs), n=3)
+        else:
+            us_t, us_d = T.interleaved_time(cm_t, cm_d, imgs, reps=5)
+        emit(f"e2e_tuned/{cfg.name}", us_t,
+             fps=round(batch / (us_t / 1e6), 1),
+             default_fps=round(batch / (us_d / 1e6), 1),
+             speedup=round(us_d / us_t, 3),
+             bit_exact=exact,
+             source=res.source,
+             config={t: c.to_dict() for t, c in sorted(res.tuning.items())},
+             space_size=res.space_size,
+             search_us=round(search_us),
+             cache_hits=cache.hits, cache_misses=cache.misses)
+
+
 def kernels_micro():
     print("\n## kernels_micro — interpret-mode timings (TPU is the target)")
     print("name,us_per_call,derived")
@@ -223,7 +274,8 @@ def main() -> None:
     args = ap.parse_args()
     benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
                    fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
-                   kernels_micro=kernels_micro, roofline=roofline)
+                   e2e_tuned=e2e_tuned, kernels_micro=kernels_micro,
+                   roofline=roofline)
     names = args.only.split(",") if args.only else list(benches)
     unknown = [n for n in names if n not in benches]
     if unknown:

@@ -2,16 +2,18 @@
 compiler for the serving path.
 
     parse (core.graph builders) -> optimize (core.graph.optimize) ->
+    tune (repro.tune: per-task KernelConfig via compile_model(tune=...)) ->
     lower (compile.lowering + a registered Backend) ->
     execute (compile.CompiledModel: fixed-shape AOT executables per bucket)
 
-See docs/serving.md for the end-to-end flow.
+See docs/serving.md for the end-to-end flow and docs/tuning.md for the
+design-space exploration layer.
 """
 from repro.compile.params import (                       # noqa: F401
     QConvParams, QLinearParams, QBlockParams, QResNetParams, ensure_typed)
 from repro.compile.lowering import (                     # noqa: F401
     LoweringError, LoweringPlan, StemTask, BlockTask, HeadTask,
-    model_graph, optimized_graph, plan_model)
+    model_graph, optimized_graph, plan_model, annotate_tuning)
 from repro.compile.backends import (                     # noqa: F401
     Backend, register_backend, get_backend, list_backends)
 from repro.compile.compiler import (                     # noqa: F401

@@ -141,7 +141,9 @@ class LaxIntBackend:
 class PallasBackend:
     """Fused kernel pipeline: one ``conv_stem`` kernel, then one
     ``resblock_fused`` kernel per residual block (conv0 + ReLU/requant +
-    optional 1x1 downsample + add-fold + conv1 + ReLU/requant, all in VMEM)."""
+    optional 1x1 downsample + add-fold + conv1 + ReLU/requant, all in VMEM).
+    Each task's tuned :class:`~repro.tune.KernelConfig` (stamped on the graph
+    by ``lowering.annotate_tuning``) selects the kernel's tiling/grid."""
 
     def lower(self, g, cfg, params: QResNetParams) -> Callable:
         from repro.kernels.conv_stem.ops import conv_stem_op
@@ -153,7 +155,8 @@ class PallasBackend:
             xq = Q.quantize(images, X_SPEC)
             st = params.stem
             h = conv_stem_op(xq, st.wq, st.bq,
-                             shift=A_SPEC.exp - st.product_exp)
+                             shift=A_SPEC.exp - st.product_exp,
+                             config=plan.stem.config)
             for task in plan.blocks:
                 blk = params.blocks[task.index]
                 sh = blk.shifts(A_SPEC.exp)
@@ -164,7 +167,7 @@ class PallasBackend:
                 h = resblock_fused_op(
                     h, blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
                     blk.conv1.wq, blk.conv1.bq.astype(jnp.int32),
-                    wd, bd, stride=task.stride, **sh)
+                    wd, bd, stride=task.stride, config=task.config, **sh)
             return _float_head(h, params.fc)
 
         return forward

@@ -47,10 +47,15 @@ def _donate_argnums():
 
 class CompiledModel:
     """A quantized network lowered through one backend into per-bucket
-    fixed-shape executables.  Callable: ``logits = cm(images)``."""
+    fixed-shape executables.  Callable: ``logits = cm(images)``.
+
+    ``tuning`` (optional) maps lowering task keys (``"stem"``,
+    ``"block{i}"``) to :class:`~repro.tune.KernelConfig`; it is stamped onto
+    the optimized graph before lowering, so every executable of this model
+    runs the tuned tiling."""
 
     def __init__(self, cfg, params: QResNetParams, backend: Backend,
-                 batch_sizes: Sequence[int]):
+                 batch_sizes: Sequence[int], tuning=None):
         if not batch_sizes:
             raise ValueError("need at least one batch bucket")
         if any(b <= 0 for b in batch_sizes):
@@ -59,7 +64,9 @@ class CompiledModel:
         self.params = params
         self.backend = backend
         self.batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
-        self.graph = lowering.optimized_graph(cfg)
+        self.tuning = dict(tuning) if tuning else None
+        self.graph = lowering.annotate_tuning(
+            lowering.optimized_graph(cfg), self.tuning)
         self._forward = backend.lower(self.graph, cfg, params)
         self._donate = bool(_donate_argnums())
         self._execs: Dict[int, Callable] = {}
@@ -137,25 +144,70 @@ class CompiledModel:
                     batch_sizes=self.batch_sizes,
                     compiled=sorted(self._execs),
                     compile_count=self.compile_count,
-                    trace_counts=dict(self.trace_counts))
+                    trace_counts=dict(self.trace_counts),
+                    tuning={t: c.to_dict()
+                            for t, c in sorted(self.tuning.items())}
+                    if self.tuning else None)
 
     def __repr__(self):
         return (f"CompiledModel({self.cfg.name}, backend={self.backend.name!r}, "
                 f"buckets={self.batch_sizes}, compiled={sorted(self._execs)})")
 
 
+def _resolve_tuning(cfg, params, backend_name, batch_sizes, tune):
+    """Normalize the ``tune`` argument of :func:`compile_model` into a
+    task->KernelConfig dict (or None).  Accepted forms:
+
+      * ``None`` / ``False``   — untuned (the default tiling).
+      * a dict                 — an explicit per-task assignment (the format
+                                 ``tune.search`` returns / the cache stores).
+      * a ``TuneResult``       — its ``.tuning``.
+      * ``"auto"``             — cache hit or run the full two-stage search.
+      * ``"analytic"``         — cost-model stage only (no device timing).
+      * ``"device"``           — force a fresh two-stage search (still
+                                 written back to the cache).
+    """
+    if not tune:
+        return None
+    if hasattr(tune, "tuning"):          # TuneResult without importing it
+        return tune.tuning
+    if isinstance(tune, dict):
+        # normalize cache-style {"task": {"knob": v}} entries to KernelConfig
+        # so stats()/engine introspection sees one type
+        from repro.tune.config import KernelConfig
+        return {task: c if isinstance(c, KernelConfig)
+                else KernelConfig.from_dict(c)
+                for task, c in tune.items()}
+    if isinstance(tune, str):
+        from repro import tune as T      # lazy: repro.tune imports us
+        if tune not in ("auto", "analytic", "device"):
+            raise ValueError(
+                f"tune={tune!r}: expected a task->KernelConfig dict, a "
+                f"TuneResult, or one of 'auto'/'analytic'/'device'")
+        res = T.search(cfg, params, backend=backend_name,
+                       batch=max(batch_sizes),
+                       device=tune != "analytic",
+                       use_cache=tune != "device")
+        return res.tuning
+    raise TypeError(f"unsupported tune argument: {type(tune).__name__}")
+
+
 def compile_model(cfg, qparams, backend: Union[str, Backend] = "pallas",
                   batch_sizes: Sequence[int] = (1, 8, 32),
-                  eager: bool = False) -> CompiledModel:
+                  eager: bool = False, tune=None) -> CompiledModel:
     """Lower the optimized graph of ``cfg`` through ``backend`` into a
     :class:`CompiledModel` with one fixed-shape executable per batch bucket.
 
     ``qparams`` may be the legacy ``quantize_params`` dict or a typed
     :class:`QResNetParams`; ``backend`` a registered name or an instance.
+    ``tune`` selects the kernel tiling: a per-task dict / ``TuneResult`` from
+    ``repro.tune``, or ``"auto"``/``"analytic"``/``"device"`` to run the
+    search here (see :func:`_resolve_tuning`).
     """
     params = ensure_typed(qparams)
     be = get_backend(backend) if isinstance(backend, str) else backend
-    cm = CompiledModel(cfg, params, be, batch_sizes)
+    tuning = _resolve_tuning(cfg, params, be.name, batch_sizes, tune)
+    cm = CompiledModel(cfg, params, be, batch_sizes, tuning=tuning)
     if eager:
         cm.warmup()
     return cm

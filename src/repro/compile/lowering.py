@@ -25,6 +25,7 @@ from typing import List, Optional
 
 from repro.core import graph as G
 from repro.compile.params import QResNetParams
+from repro.tune.config import KernelConfig
 
 
 class LoweringError(ValueError):
@@ -35,6 +36,7 @@ class LoweringError(ValueError):
 class StemTask:
     node: str                 # graph node name
     och: int
+    config: Optional[KernelConfig] = None   # tuned tiling (None = default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,7 @@ class BlockTask:
     stride: int
     has_ds: bool              # 1x1 downsample merged into conv0 (loop_merge)
     och: int
+    config: Optional[KernelConfig] = None   # tuned tiling (None = default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +74,31 @@ def optimized_graph(cfg) -> G.Graph:
     return G.optimize(model_graph(cfg))
 
 
+def annotate_tuning(g: G.Graph, tuning) -> G.Graph:
+    """Stamp tuned :class:`KernelConfig`\\ s onto the optimized graph's conv
+    nodes (``attrs["kcfg"]``) so :func:`plan_model` carries them into the
+    tasks and any backend sees the same assignment.  ``tuning`` maps plan
+    task keys (``"stem"``, ``"block{i}"``) to configs — the format
+    ``repro.tune.search`` returns and the JSON cache stores."""
+    if not tuning:
+        return g
+    for n in g.nodes:
+        if n.op != "conv":
+            continue
+        role = n.attrs.get("role")
+        if role == "stem":
+            c = tuning.get("stem")
+        elif role == "conv0":
+            c = tuning.get(f"block{n.attrs['block']}")
+        else:
+            continue
+        if c is not None:
+            if not isinstance(c, KernelConfig):
+                c = KernelConfig.from_dict(c)
+            n.attrs["kcfg"] = c
+    return g
+
+
 def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPlan:
     """Walk an optimized graph into the ordered task list.
 
@@ -95,7 +123,8 @@ def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPl
                 if not {"bn", "relu"} <= set(n.fused):
                     raise LoweringError(
                         f"{n.name}: stem must have bn+relu folded in")
-                stem = StemTask(node=n.name, och=n.attrs["och"])
+                stem = StemTask(node=n.name, och=n.attrs["och"],
+                                config=n.attrs.get("kcfg"))
             elif role == "conv0":
                 if pending_conv0 is not None:
                     raise LoweringError(
@@ -121,7 +150,7 @@ def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPl
                     index=n.attrs["block"], conv0=c0.name, conv1=n.name,
                     stride=c0.attrs["stride"],
                     has_ds=any(f.startswith("downsample:") for f in c0.fused),
-                    och=n.attrs["och"]))
+                    och=n.attrs["och"], config=c0.attrs.get("kcfg")))
                 pending_conv0 = None
             elif role == "ds":
                 raise LoweringError(

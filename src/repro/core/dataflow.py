@@ -159,6 +159,81 @@ def residual_block_hbm_bytes(h: int, w: int, ich: int, och: int,
 
 
 # ---------------------------------------------------------------------------
+# TPU adaptation: tiled-kernel HBM traffic + VMEM footprint (repro.tune's
+# analytic cost model — the DSP/BRAM budget of §III-E becomes an HBM-traffic/
+# VMEM budget)
+# ---------------------------------------------------------------------------
+
+
+def conv_task_hbm_bytes(layer: ConvLayer, batch: int, batch_tile: int,
+                        act_bytes: int = 1, w_bytes: int = 1) -> int:
+    """HBM bytes one tiled conv kernel moves for a ``batch``: activations
+    move exactly once (read input map, write output map), but the filter +
+    bias are re-fetched by every batch-grid step — the term the tuner's
+    ``batch_tile`` knob amortizes.  ``cout_block`` does not change the total
+    (the channel blocks of one batch step partition the filter); it only
+    moves the VMEM footprint."""
+    acts = batch * (layer.ih * layer.iw * layer.ich
+                    + layer.oh * layer.ow * layer.och) * act_bytes
+    steps = batch // max(1, batch_tile)
+    weights = (layer.weights * w_bytes + layer.och * 4) * steps
+    return acts + weights
+
+
+def conv_task_vmem_bytes(layer: ConvLayer, batch_tile: int, cout_block: int,
+                         act_bytes: int = 1, w_bytes: int = 1) -> int:
+    """Per-grid-step VMEM footprint of the tiled conv kernel: the input tile
+    (floored by the eq. 16 window buffer — a step can never retain less than
+    one input window), the filter/bias slice, the int32 accumulator, and the
+    output tile."""
+    cb = cout_block or layer.och
+    ihp, iwp = layer.ih + layer.fh - 1, layer.iw + layer.fw - 1
+    in_tile = max(batch_tile * ihp * iwp * layer.ich,
+                  window_buffer_size(layer.iw, layer.ich, layer.fh, layer.fw)
+                  ) * act_bytes
+    w_tile = layer.fh * layer.fw * layer.ich * cb * w_bytes + cb * 4
+    acc = layer.oh * layer.ow * cb * 4
+    out_tile = batch_tile * layer.oh * layer.ow * cb * act_bytes
+    return in_tile + w_tile + acc + out_tile
+
+
+def resblock_task_hbm_bytes(h: int, w: int, ich: int, och: int, batch: int,
+                            batch_tile: int, downsample: bool = False,
+                            stride: int = 1, act_bytes: int = 1,
+                            w_bytes: int = 1) -> int:
+    """HBM bytes the fused residual-block kernel moves for a ``batch``: the
+    eq.-23-style fused activation traffic (read x once, write the block
+    output) plus both conv filters (+ the 1x1 downsample filter when present)
+    re-fetched per batch-grid step."""
+    acts = batch * residual_block_hbm_bytes(
+        h, w, ich, och, bytes_per_elt=act_bytes, fused=True,
+        downsample=downsample, stride=stride)
+    wts = (9 * ich * och + 9 * och * och
+           + (ich * och if downsample else 0)) * w_bytes + 2 * och * 4
+    steps = batch // max(1, batch_tile)
+    return acts + wts * steps
+
+
+def resblock_task_vmem_bytes(h: int, w: int, ich: int, och: int,
+                             batch_tile: int, downsample: bool = False,
+                             stride: int = 1, act_bytes: int = 1,
+                             w_bytes: int = 1) -> int:
+    """Per-grid-step VMEM footprint of the fused residual block: the padded
+    input tile, both filters (+ ds), and the kernel-lifetime intermediates
+    (y0, the aligned skip, and the int32 accumulator) that the fusion keeps
+    out of HBM."""
+    oh, ow = h // stride, w // stride
+    in_tile = batch_tile * (h + 2) * (w + 2) * ich * act_bytes
+    wts = (9 * ich * och + 9 * och * och
+           + (ich * och if downsample else 0)) * w_bytes + 2 * och * 4
+    y0 = (oh + 2) * (ow + 2) * och * act_bytes      # padded intermediate
+    acc = oh * ow * och * 4                          # conv accumulator
+    skip = oh * ow * och * 4                         # aligned skip stream
+    out_tile = batch_tile * oh * ow * och * act_bytes
+    return in_tile + wts + y0 + acc + skip + out_tile
+
+
+# ---------------------------------------------------------------------------
 # ResNet layer tables (mirrors graph.build_resnet_graph; used by ILP/benchmarks)
 # ---------------------------------------------------------------------------
 

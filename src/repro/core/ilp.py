@@ -131,6 +131,19 @@ def solve(layers: Sequence[ConvLayer], n_par: int, freq_hz: float,
     return best
 
 
+def balanced_och_par(layers: Sequence[ConvLayer], pow2: bool = True,
+                     ow_par: int = 2) -> List[int]:
+    """Per-layer ``och_par`` when the busiest layer is fully unrolled — the
+    eq. 12-14 balance point with no resource cap.  ``repro.tune`` uses this
+    as the channel-block floor when enumerating kernel configs: a task tiled
+    below its balanced unroll is the pipeline bottleneck by construction, so
+    those candidates are pruned before costing (the software mirror of
+    Algorithm 1's proportional allocation)."""
+    cmax = max(l.c for l in layers)
+    imax = [l.c for l in layers].index(cmax)
+    return balance(layers, layers[imax].och, ow_par=ow_par, pow2=pow2)
+
+
 # Platform DSP budgets (paper Table 2), achieved clocks (Table 3), and
 # weight-port bandwidth (words/cycle).  Ultra96 stores weights in BRAM
 # (216 x 36-bit ports = 4 int8 words each -> not binding vs 360 DSPs);

@@ -1,15 +1,17 @@
 """INT8 NHWC conv2d Pallas kernel (paper's convolution computation task).
 
 TPU adaptation of §III-C/III-F: instead of an FPGA line buffer streaming one
-window per cycle, each grid step holds one image's (padded) feature map in
-VMEM — CIFAR-scale maps are tiny (32*32*16 int8 = 16 KiB) — and issues one
-MXU ``dot`` per filter tap, accumulating in int32.  The filter loop is fully
-unrolled (the paper unrolls fh*fw in hardware); requantization back to int8
-is a power-of-two shift done in the epilogue.
+window per cycle, each grid step holds ``batch_tile`` images' (padded)
+feature maps in VMEM — CIFAR-scale maps are tiny (32*32*16 int8 = 16 KiB) —
+and issues one MXU ``dot`` per filter tap, accumulating in int32.  The filter
+loop is fully unrolled (the paper unrolls fh*fw in hardware); requantization
+back to int8 is a power-of-two shift done in the epilogue.
 
-Grid: (N,).  BlockSpecs give the kernel the whole padded image, the filter,
-the bias, and (optionally) an int32 skip stream to initialize the accumulator
-(add-fold).
+Tiling knobs (``repro.tune.KernelConfig``): ``batch_tile`` images and
+``cout_block`` output channels per grid step — the software ``och_par``
+unroll of §III-E.  Grid: (N/bt, O/cb).  BlockSpecs slice the filter, bias,
+skip stream, and output along the output-channel axis, so a grid step only
+holds its own filter slice in VMEM.
 """
 from __future__ import annotations
 
@@ -21,45 +23,52 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(x_ref, w_ref, b_ref, s_ref, o_ref, *, fh, fw, stride, oh, ow,
-            has_skip, relu, out_shift):
-    x = x_ref[0]                       # (Hp, Wp, C) int8
-    w = w_ref[...]                     # (fh, fw, C, O)
-    acc = (s_ref[0].astype(jnp.int32) if has_skip
-           else jnp.zeros((oh, ow, w.shape[-1]), jnp.int32))
-    acc = acc + b_ref[...].astype(jnp.int32)
-    for kh in range(fh):
-        for kw in range(fw):
-            xs = jax.lax.slice(
-                x, (kh, kw, 0),
-                (kh + (oh - 1) * stride + 1, kw + (ow - 1) * stride + 1,
-                 x.shape[2]),
-                (stride, stride, 1))   # (oh, ow, C)
-            acc += jax.lax.dot(
-                xs.reshape(oh * ow, -1).astype(jnp.int32),
-                w[kh, kw].astype(jnp.int32),
-                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
-    if relu:
-        acc = jnp.maximum(acc, 0)
-    if out_shift is not None:
-        # pow2 requantization (paper: rescale == bit shift)
-        if out_shift > 0:
-            half = jnp.int32(1) << (out_shift - 1)
-            acc = (acc + half) >> out_shift
-        acc = jnp.clip(acc, 0 if relu else -128, 255 if relu else 127)
-        o_ref[0] = acc.astype(o_ref.dtype)
-    else:
-        o_ref[0] = acc.astype(o_ref.dtype)
+            has_skip, relu, out_shift, bt):
+    w = w_ref[...]                         # (fh, fw, C, cb)
+    for i in range(bt):
+        x = x_ref[i]                       # (Hp, Wp, C) int8
+        acc = (s_ref[i].astype(jnp.int32) if has_skip
+               else jnp.zeros((oh, ow, w.shape[-1]), jnp.int32))
+        acc = acc + b_ref[...].astype(jnp.int32)
+        for kh in range(fh):
+            for kw in range(fw):
+                xs = jax.lax.slice(
+                    x, (kh, kw, 0),
+                    (kh + (oh - 1) * stride + 1, kw + (ow - 1) * stride + 1,
+                     x.shape[2]),
+                    (stride, stride, 1))   # (oh, ow, C)
+                acc += jax.lax.dot(
+                    xs.reshape(oh * ow, -1).astype(jnp.int32),
+                    w[kh, kw].astype(jnp.int32),
+                    preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+        if relu:
+            acc = jnp.maximum(acc, 0)
+        if out_shift is not None:
+            # pow2 requantization (paper: rescale == bit shift)
+            if out_shift > 0:
+                half = jnp.int32(1) << (out_shift - 1)
+                acc = (acc + half) >> out_shift
+            acc = jnp.clip(acc, 0 if relu else -128, 255 if relu else 127)
+            o_ref[i] = acc.astype(o_ref.dtype)
+        else:
+            o_ref[i] = acc.astype(o_ref.dtype)
 
 
 def conv2d_int8(x, w, b, skip=None, *, stride=1, relu=False, out_shift=None,
-                interpret=False):
+                batch_tile=1, cout_block=0, interpret=False):
     """x: (N,H,W,C) int8 *already padded* for SAME (pad=(fh-1)//2 applied by
     the caller); w: (fh,fw,C,O) int8; b: (O,) int32; skip: (N,OH,OW,O) int32.
+    ``batch_tile`` must divide N and ``cout_block`` must divide O (0 =
+    maximal).
 
     Returns int32 accumulator map (or int8/uint8 if out_shift is given)."""
     N, Hp, Wp, C = x.shape
     fh, fw, C2, O = w.shape
     assert C == C2
+    bt = N if batch_tile == 0 else batch_tile
+    cb = O if cout_block == 0 else cout_block
+    assert N % bt == 0, (N, bt)
+    assert O % cb == 0, (O, cb)
     oh = (Hp - fh) // stride + 1
     ow = (Wp - fw) // stride + 1
     has_skip = skip is not None
@@ -69,15 +78,16 @@ def conv2d_int8(x, w, b, skip=None, *, stride=1, relu=False, out_shift=None,
         jnp.uint8 if relu else jnp.int8)
     return pl.pallas_call(
         functools.partial(_kernel, fh=fh, fw=fw, stride=stride, oh=oh, ow=ow,
-                          has_skip=has_skip, relu=relu, out_shift=out_shift),
-        grid=(N,),
+                          has_skip=has_skip, relu=relu, out_shift=out_shift,
+                          bt=bt),
+        grid=(N // bt, O // cb),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, C), lambda n: (n, 0, 0, 0)),
-            pl.BlockSpec((fh, fw, C, O), lambda n: (0, 0, 0, 0)),
-            pl.BlockSpec((O,), lambda n: (0,)),
-            pl.BlockSpec((1, oh, ow, O), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((bt, Hp, Wp, C), lambda n, c: (n, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, C, cb), lambda n, c: (0, 0, 0, c)),
+            pl.BlockSpec((cb,), lambda n, c: (c,)),
+            pl.BlockSpec((bt, oh, ow, cb), lambda n, c: (n, 0, 0, c)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, O), lambda n: (n, 0, 0, 0)),
+        out_specs=pl.BlockSpec((bt, oh, ow, cb), lambda n, c: (n, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((N, oh, ow, O), out_dtype),
         interpret=interpret,
     )(x, w, b, skip)

@@ -6,14 +6,18 @@ import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
 from repro.kernels.conv2d_int8.conv2d_int8 import conv2d_int8
+from repro.tune.config import DEFAULT, KernelConfig
 
 
-@partial(jax.jit, static_argnames=("stride", "relu", "out_shift"))
+@partial(jax.jit, static_argnames=("stride", "relu", "out_shift", "config"))
 def conv2d_int8_op(x, w, b, skip=None, *, stride=1, relu=False,
-                   out_shift=None):
-    """SAME conv: pads x then calls the kernel."""
+                   out_shift=None, config: KernelConfig = None):
+    """SAME conv: pads x then calls the kernel.  ``config`` carries the tuned
+    batch/channel tiling knobs."""
+    cfg = (config or DEFAULT).normalize(x.shape[0], w.shape[-1])
     fh, fw = w.shape[0], w.shape[1]
     ph, pw = (fh - 1) // 2, (fw - 1) // 2
     xp = jnp.pad(x, ((0, 0), (ph, fh - 1 - ph), (pw, fw - 1 - pw), (0, 0)))
     return conv2d_int8(xp, w, b, skip, stride=stride, relu=relu,
-                       out_shift=out_shift, interpret=use_interpret())
+                       out_shift=out_shift, batch_tile=cfg.batch_tile,
+                       cout_block=cfg.cout_block, interpret=use_interpret())

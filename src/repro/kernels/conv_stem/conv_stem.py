@@ -8,8 +8,15 @@ block, this kernel completes Pallas coverage of the whole integer graph:
 feature maps enter HBM only between kernels, exactly once each.
 
 Input is pre-padded (1,1) by the wrapper (SAME for stride 1).  The input
-channel count is tiny (3); each grid step owns one image in VMEM and issues
-one MXU dot per filter tap, like conv2d_int8.  Grid: (N,).
+channel count is tiny (3); each grid step owns ``batch_tile`` images in VMEM
+and issues one MXU dot per filter tap, like conv2d_int8.
+
+Tiling knobs (``repro.tune.KernelConfig``): ``batch_tile`` images per grid
+step and ``cout_block`` output channels per grid step — the software
+``och_par`` unroll of the paper's §III-E.  Grid: (N/bt, Cout/cb); the weight
+and bias blocks are sliced along the output-channel axis, so a grid step
+only holds its own filter slice in VMEM.  Every (bt, cb) point is bit-exact
+with the default (asserted per enumerated config in tests/test_tune.py).
 """
 from __future__ import annotations
 
@@ -22,37 +29,44 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import requant_u8
 
 
-def _kernel(x_ref, w_ref, b_ref, o_ref, *, oh, ow, shift):
-    xp = x_ref[0]                           # (H+2, W+2, 3) uint8
-    w = w_ref[...]                          # (3, 3, 3, C)
-    acc = jnp.broadcast_to(b_ref[...].astype(jnp.int32),
-                           (oh, ow, w.shape[-1])).astype(jnp.int32)
-    for kh in range(w.shape[0]):
-        for kw in range(w.shape[1]):
-            xs = jax.lax.slice(xp, (kh, kw, 0),
-                               (kh + oh, kw + ow, xp.shape[2]))
-            acc += jax.lax.dot(
-                xs.reshape(oh * ow, -1).astype(jnp.int32),
-                w[kh, kw].astype(jnp.int32),
-                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
-    o_ref[0] = requant_u8(acc, shift)
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, oh, ow, shift, bt):
+    w = w_ref[...]                          # (3, 3, Cin, cb)
+    for i in range(bt):
+        xp = x_ref[i]                       # (H+2, W+2, Cin) uint8
+        acc = jnp.broadcast_to(b_ref[...].astype(jnp.int32),
+                               (oh, ow, w.shape[-1])).astype(jnp.int32)
+        for kh in range(w.shape[0]):
+            for kw in range(w.shape[1]):
+                xs = jax.lax.slice(xp, (kh, kw, 0),
+                                   (kh + oh, kw + ow, xp.shape[2]))
+                acc += jax.lax.dot(
+                    xs.reshape(oh * ow, -1).astype(jnp.int32),
+                    w[kh, kw].astype(jnp.int32),
+                    preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+        o_ref[i] = requant_u8(acc, shift)
 
 
-def conv_stem(x, w, b, *, shift, interpret=False):
+def conv_stem(x, w, b, *, shift, batch_tile=1, cout_block=0, interpret=False):
     """x: (N,H+2,W+2,Cin) uint8 pre-padded; w: (3,3,Cin,Cout) int8;
-    b: (Cout,) int32.  Returns (N,H,W,Cout) uint8 post-ReLU activations."""
+    b: (Cout,) int32.  Returns (N,H,W,Cout) uint8 post-ReLU activations.
+    ``batch_tile`` must divide N and ``cout_block`` must divide Cout
+    (0 = maximal)."""
     N, Hp, Wp, Cin = x.shape
-    Cout = w.shape[-1]
+    fh, fw, _, Cout = w.shape
+    bt = N if batch_tile == 0 else batch_tile
+    cb = Cout if cout_block == 0 else cout_block
+    assert N % bt == 0, (N, bt)
+    assert Cout % cb == 0, (Cout, cb)
     oh, ow = Hp - 2, Wp - 2
     return pl.pallas_call(
-        functools.partial(_kernel, oh=oh, ow=ow, shift=shift),
-        grid=(N,),
+        functools.partial(_kernel, oh=oh, ow=ow, shift=shift, bt=bt),
+        grid=(N // bt, Cout // cb),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),
-            pl.BlockSpec(w.shape, lambda n: (0,) * 4),
-            pl.BlockSpec(b.shape, lambda n: (0,)),
+            pl.BlockSpec((bt, Hp, Wp, Cin), lambda n, c: (n, 0, 0, 0)),
+            pl.BlockSpec((fh, fw, Cin, cb), lambda n, c: (0, 0, 0, c)),
+            pl.BlockSpec((cb,), lambda n, c: (c,)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, Cout), lambda n: (n, 0, 0, 0)),
+        out_specs=pl.BlockSpec((bt, oh, ow, cb), lambda n, c: (n, 0, 0, c)),
         out_shape=jax.ShapeDtypeStruct((N, oh, ow, Cout), jnp.uint8),
         interpret=interpret,
     )(x, w, b)

@@ -5,9 +5,16 @@ import jax
 
 from repro.kernels.common import use_interpret
 from repro.kernels.matmul_int8.matmul_int8 import matmul_int8
+from repro.tune.config import KernelConfig
 
 
-@partial(jax.jit, static_argnames=("bm", "bn", "bk"))
-def matmul_int8_op(a, b, acc_init=None, *, bm=128, bn=128, bk=128):
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "config"))
+def matmul_int8_op(a, b, acc_init=None, *, bm=128, bn=128, bk=128,
+                   config: KernelConfig = None):
+    """``config`` (if given) overrides the explicit bm/bn/bk tile arguments
+    wherever it carries a non-default value — the tuner's handle on the MXU
+    tiling knobs."""
+    if config is not None:
+        bm, bn, bk = config.bm or bm, config.bn or bn, config.bk or bk
     return matmul_int8(a, b, acc_init, bm=bm, bn=bn, bk=bk,
                        interpret=use_interpret())

@@ -21,7 +21,14 @@ Covers every block shape of ResNet8/20:
 Padding convention (must match ``jax.lax`` SAME): the caller pre-pads the
 input with ``pad_lo = 1, pad_hi = 1`` for stride 1 and ``pad_lo = 0,
 pad_hi = 1`` for stride 2 (lax splits the 1-row SAME padding of a stride-2
-3x3 conv as (0, 1)).  Grid: (N,).
+3x3 conv as (0, 1)).
+
+Tiling knob (``repro.tune.KernelConfig``): ``batch_tile`` images per grid
+step — larger tiles amortize the per-step weight reload.  Grid: (N/bt,).
+Channel blocking is structurally illegal here: conv1 consumes *all* of
+conv0's output channels, so splitting Cout across grid steps would force the
+intermediate y0 back through HBM — exactly the traffic the fusion removes.
+``tune.space`` therefore never enumerates ``cout_block`` for this kernel.
 """
 from __future__ import annotations
 
@@ -54,51 +61,56 @@ def _conv_tap_acc(x, w, oh, ow, acc, stride=1):
 
 
 def _kernel(x_ref, w0_ref, b0_ref, w1_ref, b1_ref, wd_ref, bd_ref, o_ref, *,
-            oh, ow, stride, shift0, shift1, skip_shift, has_ds, pad_lo):
-    xp = x_ref[0]                           # (Hp, Wp, Cin) uint8 padded
+            oh, ow, stride, shift0, shift1, skip_shift, has_ds, pad_lo, bt):
     co = b0_ref.shape[0]
-    # ---- conv0 (strided) + relu + requant (stays in VMEM) ----
-    acc0 = jnp.broadcast_to(b0_ref[...].astype(jnp.int32),
-                            (oh, ow, co)).astype(jnp.int32)
-    acc0 = _conv_tap_acc(xp, w0_ref[...], oh, ow, acc0, stride)
-    y0 = requant_u8(acc0, shift0)                           # (oh,ow,Cout)
-    y0p = jnp.pad(y0, ((1, 1), (1, 1), (0, 0)))
-    # ---- skip stream, rescaled into conv1's product domain ----
-    if has_ds:
-        # fused 1x1 downsample conv: SAME padding of a 1x1 conv is zero, so
-        # output o reads x[o*stride] = xp[pad_lo + o*stride]
-        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
-                           (pad_lo + (oh - 1) * stride + 1,
-                            pad_lo + (ow - 1) * stride + 1, xp.shape[2]),
-                           (stride, stride, 1))             # (oh,ow,Cin)
-        accd = jax.lax.dot(
-            xs.reshape(oh * ow, -1).astype(jnp.int32),
-            wd_ref[...][0, 0].astype(jnp.int32),
-            preferred_element_type=jnp.int32).reshape(oh, ow, -1)
-        accd = accd + bd_ref[...].astype(jnp.int32)
-        skip = shift_align(accd, skip_shift)
-    else:
-        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
-                           (pad_lo + oh, pad_lo + ow, xp.shape[2]))
-        skip = shift_align(xs, skip_shift)
-    # ---- conv1 with add-fold: skip initializes the accumulator ----
-    acc1 = skip + b1_ref[...].astype(jnp.int32)
-    acc1 = _conv_tap_acc(y0p, w1_ref[...], oh, ow, acc1)
-    o_ref[0] = requant_u8(acc1, shift1)
+    for i in range(bt):
+        xp = x_ref[i]                       # (Hp, Wp, Cin) uint8 padded
+        # ---- conv0 (strided) + relu + requant (stays in VMEM) ----
+        acc0 = jnp.broadcast_to(b0_ref[...].astype(jnp.int32),
+                                (oh, ow, co)).astype(jnp.int32)
+        acc0 = _conv_tap_acc(xp, w0_ref[...], oh, ow, acc0, stride)
+        y0 = requant_u8(acc0, shift0)                       # (oh,ow,Cout)
+        y0p = jnp.pad(y0, ((1, 1), (1, 1), (0, 0)))
+        # ---- skip stream, rescaled into conv1's product domain ----
+        if has_ds:
+            # fused 1x1 downsample conv: SAME padding of a 1x1 conv is zero,
+            # so output o reads x[o*stride] = xp[pad_lo + o*stride]
+            xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                               (pad_lo + (oh - 1) * stride + 1,
+                                pad_lo + (ow - 1) * stride + 1, xp.shape[2]),
+                               (stride, stride, 1))         # (oh,ow,Cin)
+            accd = jax.lax.dot(
+                xs.reshape(oh * ow, -1).astype(jnp.int32),
+                wd_ref[...][0, 0].astype(jnp.int32),
+                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+            accd = accd + bd_ref[...].astype(jnp.int32)
+            skip = shift_align(accd, skip_shift)
+        else:
+            xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                               (pad_lo + oh, pad_lo + ow, xp.shape[2]))
+            skip = shift_align(xs, skip_shift)
+        # ---- conv1 with add-fold: skip initializes the accumulator ----
+        acc1 = skip + b1_ref[...].astype(jnp.int32)
+        acc1 = _conv_tap_acc(y0p, w1_ref[...], oh, ow, acc1)
+        o_ref[i] = requant_u8(acc1, shift1)
 
 
 def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
-                   shift0, shift1, skip_shift=0, interpret=False):
+                   shift0, shift1, skip_shift=0, batch_tile=1,
+                   interpret=False):
     """x: (N,Hp,Wp,Cin) uint8 pre-padded per the module's SAME convention;
     w0: (3,3,Cin,Cout) int8; w1: (3,3,Cout,Cout) int8; b0/b1: (Cout,) int32;
     wd: (1,1,Cin,Cout) int8 + bd: (Cout,) int32 for the fused downsample skip
     (None for identity skip).  shift0/shift1: pow2 requant shifts (positive =
     right shift); skip_shift: signed product-domain alignment shift.
+    ``batch_tile`` images per grid step (0 = whole batch, must divide N).
     Returns (N,oh,ow,Cout) uint8."""
     N, Hp, Wp, Cin = x.shape
     Cout = w0.shape[-1]
     has_ds = wd is not None
     pad_lo = 1 if stride == 1 else 0
+    bt = N if batch_tile == 0 else batch_tile
+    assert N % bt == 0, (N, bt)
     oh = (Hp - 3) // stride + 1
     ow = (Wp - 3) // stride + 1
     if not has_ds:
@@ -108,10 +120,10 @@ def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
     return pl.pallas_call(
         functools.partial(_kernel, oh=oh, ow=ow, stride=stride, shift0=shift0,
                           shift1=shift1, skip_shift=skip_shift, has_ds=has_ds,
-                          pad_lo=pad_lo),
-        grid=(N,),
+                          pad_lo=pad_lo, bt=bt),
+        grid=(N // bt,),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((bt, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),
             pl.BlockSpec(w0.shape, lambda n: (0,) * 4),
             pl.BlockSpec(b0.shape, lambda n: (0,)),
             pl.BlockSpec(w1.shape, lambda n: (0,) * 4),
@@ -119,7 +131,7 @@ def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
             pl.BlockSpec(wd.shape, lambda n: (0,) * 4),
             pl.BlockSpec(bd.shape, lambda n: (0,)),
         ],
-        out_specs=pl.BlockSpec((1, oh, ow, Cout), lambda n: (n, 0, 0, 0)),
+        out_specs=pl.BlockSpec((bt, oh, ow, Cout), lambda n: (n, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((N, oh, ow, Cout), jnp.uint8),
         interpret=interpret,
     )(x, w0, b0, w1, b1, wd, bd)

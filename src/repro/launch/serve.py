@@ -58,7 +58,10 @@ def serve_resnet(args):
                        batch_sizes=buckets,
                        ab_backends=tuple(
                            b for b in args.ab.split(",") if b) if args.ab
-                       else ())
+                       else (),
+                       tune=args.tune or None)
+    if eng.tuning:
+        print(f"  tuned: {({t: c.to_dict() for t, c in eng.tuning.items()})}")
     # warm every bucket of the primary and the A/B shadows so the timing
     # below is serve-only
     eng.model.warmup()
@@ -96,6 +99,12 @@ def main():
                     help="resnet: a repro.compile registered backend")
     ap.add_argument("--ab", default="",
                     help="resnet: comma-separated shadow backends to A/B")
+    ap.add_argument("--tune", default="",
+                    choices=("", "auto", "analytic", "device"),
+                    help="resnet: kernel autotuning — 'auto' serves from the "
+                         "REPRO_TUNE_CACHE config cache (searching on miss), "
+                         "'analytic' is cost-model-only, 'device' forces a "
+                         "fresh two-stage search")
     args = ap.parse_args()
     if args.arch in RESNET_ARCHS:
         serve_resnet(args)

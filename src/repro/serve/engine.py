@@ -148,10 +148,15 @@ class ResNetEngine:
     the primary batch is replayed through each shadow and the max absolute
     logit deviation is recorded in ``ab_stats`` — a live parity probe for
     canarying a new backend against the serving one.
+
+    ``tune`` engages the ``repro.tune`` design-space layer (a per-task
+    config dict / TuneResult, or ``"auto"``/``"analytic"``/``"device"``):
+    the primary model serves with the tuned kernel tiling, while the
+    shadows stay untuned so the A/B probe also guards the tuner.
     """
 
     def __init__(self, cfg, qparams, batch: int = 8, backend: str = "pallas",
-                 params=None, batch_sizes=None, ab_backends=()):
+                 params=None, batch_sizes=None, ab_backends=(), tune=None):
         from repro.compile import compile_model
 
         del params  # legacy arg; the float backend is now self-contained
@@ -162,8 +167,13 @@ class ResNetEngine:
         if batch not in batch_sizes:
             raise ValueError(
                 f"max batch {batch} must be one of batch_sizes {batch_sizes}")
+        # ``tune`` flows straight into compile_model: a per-task dict /
+        # TuneResult from repro.tune, or "auto"/"analytic"/"device".  Tuning
+        # only reschedules the kernels — logits are bit-identical — so the
+        # shadows stay untuned: the A/B probe then also guards the tuner.
         self.model = compile_model(cfg, qparams, backend=backend,
-                                   batch_sizes=batch_sizes)
+                                   batch_sizes=batch_sizes, tune=tune)
+        self.tuning = self.model.tuning
         self.qparams = self.model.params
         self.shadows = {name: compile_model(cfg, qparams, backend=name,
                                             batch_sizes=batch_sizes)

@@ -1,0 +1,22 @@
+"""``repro.tune`` — design-space exploration & autotuning for the compiled
+kernel pipeline (the software CDSE of the paper's §III-E, Algorithm 1).
+
+    space (legal per-task KernelConfigs; dataflow legality + ILP balance)
+      -> cost (analytic roofline ranking: HBM traffic + arithmetic intensity)
+      -> search (time the top-K real executables, validate bit-exactness)
+      -> cache (persistent JSON, keyed on model/shapes/dtype/backend/device)
+
+Entry points:
+
+    res = tune.search(cfg, qp, backend="pallas", batch=8)     # TuneResult
+    cm  = compile_model(cfg, qp, tune=res.tuning)             # or tune="auto"
+    python -m repro.tune --model resnet8 --analytic-only      # CLI / CI smoke
+
+See docs/tuning.md.
+"""
+from repro.tune.config import KernelConfig, DEFAULT            # noqa: F401
+from repro.tune.cache import TuneCache, cache_key, cache_path  # noqa: F401
+from repro.tune import space, cost                             # noqa: F401
+from repro.tune.search import (                                # noqa: F401
+    TuneResult, search, device_kind, model_key, rank_spaces, joint_candidates,
+    interleaved_time)

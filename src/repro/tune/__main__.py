@@ -1,0 +1,78 @@
+"""Tuner CLI — run the design-space search from the command line.
+
+    # full two-stage search (analytic rank + device timing of the top-K):
+    PYTHONPATH=src python -m repro.tune --model resnet8 --batch 8
+
+    # CI smoke: analytic stage only, no executables built, no cache write:
+    PYTHONPATH=src python -m repro.tune --model resnet8 --analytic-only \
+        --no-cache
+
+The cache honors REPRO_TUNE_CACHE (default ~/.cache/repro/tune.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.tune import TuneCache, search, space as tspace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.tune")
+    ap.add_argument("--model", required=True, choices=("resnet8", "resnet20"))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="pallas")
+    ap.add_argument("--top-k", type=int, default=3)
+    ap.add_argument("--analytic-only", action="store_true",
+                    help="stage 1 only: rank by the cost model, skip device "
+                         "timing (CI smoke mode; the bit-exactness probe "
+                         "still compiles one executable pair unless "
+                         "--no-validate)")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip the bit-exactness probe vs lax-int")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore and do not write the config cache")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="cache file (overrides REPRO_TUNE_CACHE)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the TuneResult as JSON")
+    args = ap.parse_args()
+
+    from repro.models import resnet as R
+    cfg = {"resnet8": R.RESNET8, "resnet20": R.RESNET20}[args.model]
+    params = R.init_params(cfg, jax.random.PRNGKey(args.seed))
+    qp = R.quantize_params(R.fold_params(params), cfg)
+
+    spaces = tspace.model_space(cfg, args.batch)
+    print(f"{cfg.name} @ batch {args.batch}: "
+          f"{sum(len(v) for v in spaces.values())} legal per-task configs, "
+          f"joint space {tspace.space_size(spaces)}")
+
+    res = search(cfg, qp, backend=args.backend, batch=args.batch,
+                 top_k=args.top_k, device=not args.analytic_only,
+                 validate=not args.no_validate,
+                 cache=TuneCache(args.cache) if args.cache else None,
+                 use_cache=not args.no_cache)
+
+    print(f"source={res.source}  chosen={res.describe()}")
+    for task in sorted(res.modeled):
+        m = res.modeled[task]
+        print(f"  {task:8s} {res.tuning[task].describe():24s} "
+              f"hbm={m['hbm_bytes']}B ai={m['arithmetic_intensity']} "
+              f"steps={m['grid_steps']} modeled={m['modeled_us']}us")
+    for label, us in res.timings_us.items():
+        print(f"  timed {label}: {us}us")
+    print(f"cache: {res.cache_stats}")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(res.to_dict(), f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

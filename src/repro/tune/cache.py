@@ -1,0 +1,103 @@
+"""Persistent JSON cache of tuned kernel configs.
+
+One search per (kernel, shapes, dtype, backend, device kind) for the life of
+the machine: the two-stage search writes its winner here, and every later
+``compile_model(..., tune=...)`` call serves from the cache without touching
+the device.  The path comes from ``REPRO_TUNE_CACHE`` (default
+``~/.cache/repro/tune.json``); a missing or corrupt cache file is treated as
+empty, never an error — a half-written cache must not take serving down.
+
+Format (one flat JSON object, stable across PRs):
+
+    { "<kernel>|<shapes>|<dtype>|<backend>|<device>": {
+          "<task_key>": {"batch_tile": 4, ...}, ... }, ... }
+
+Hit/miss counters live on the cache object so ``benchmarks/run.py --json``
+can attribute perf changes to config changes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+from repro.tune.config import KernelConfig
+
+DEFAULT_CACHE = "~/.cache/repro/tune.json"
+
+
+def cache_path() -> str:
+    """Resolved cache file path (``REPRO_TUNE_CACHE`` wins)."""
+    return os.path.expanduser(os.environ.get("REPRO_TUNE_CACHE")
+                              or DEFAULT_CACHE)
+
+
+def cache_key(kernel: str, shapes, dtype: str, backend: str,
+              device_kind: str) -> str:
+    """The persistent identity of one tuning problem."""
+    shp = "x".join(",".join(str(d) for d in s) for s in shapes)
+    return f"{kernel}|{shp}|{dtype}|{backend}|{device_kind}"
+
+
+class TuneCache:
+    """Load-once, save-atomically JSON config store."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else cache_path()
+        self.hits = 0
+        self.misses = 0
+        self._data = self._load()
+
+    def _load(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            # missing, unreadable, or corrupt -> start empty (the next save
+            # rewrites the file whole)
+            return {}
+        return data if isinstance(data, dict) else {}
+
+    def get(self, key: str) -> Optional[Dict[str, KernelConfig]]:
+        """The cached per-task tuning for ``key``, or None.  Malformed
+        entries count as misses (same contract as a corrupt file)."""
+        entry = self._data.get(key)
+        if isinstance(entry, dict):
+            try:
+                out = {task: KernelConfig.from_dict(d)
+                       for task, d in entry.items()}
+            except (TypeError, ValueError):
+                out = None
+            if out is not None:
+                self.hits += 1
+                return out
+        self.misses += 1
+        return None
+
+    def put(self, key: str, tuning: Dict[str, KernelConfig]) -> None:
+        self._data[key] = {task: c.to_dict() for task, c in tuning.items()}
+
+    def save(self) -> None:
+        """Atomic write (tmp + rename) so a crashed writer can only ever
+        leave the previous cache or a complete new one."""
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tune-", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def stats(self) -> dict:
+        return dict(path=self.path, entries=len(self._data),
+                    hits=self.hits, misses=self.misses)
+
+    def __len__(self):
+        return len(self._data)

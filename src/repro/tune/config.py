@@ -1,0 +1,83 @@
+"""``KernelConfig`` — the tiling/grid knobs of the Pallas kernel pipeline.
+
+This is the unit of the design space the tuner searches (the software
+analogue of the paper's per-layer unroll factors, §III-E): one frozen,
+hashable record per kernel invocation describing how the work is cut into
+grid steps.  The kernels read it, ``tune.space`` enumerates it,
+``tune.cache`` persists it, and ``compile.lowering`` attaches it to each
+task of the plan.
+
+Knobs (0 always means "kernel default / maximal"):
+
+  * ``batch_tile``  — images per grid step.  Larger tiles amortize the
+                      per-step weight reload (the dominant HBM term of the
+                      cost model) at the price of VMEM.
+  * ``cout_block``  — output channels per grid step (conv_stem /
+                      conv2d_int8).  The analogue of the paper's ``och_par``
+                      unroll: a second grid dimension over channel blocks.
+                      Illegal for ``resblock_fused`` — conv1 consumes *all*
+                      of conv0's channels, so the fused block cannot split
+                      its intermediate (enforced by ``tune.space``).
+  * ``bm/bn/bk``    — matmul_int8 MXU tile sizes.
+
+Every config is validated for bit-exactness against the kernel refs before
+the tuner may return it; ``normalize`` snaps requested tiles to legal
+divisors of the actual shapes so a cached config can never make a kernel
+call illegal.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1)."""
+    target = max(1, min(n, target))
+    for d in range(target, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Tiling/grid knobs for one kernel invocation.  Hashable (usable as a
+    jit static argument) and JSON round-trippable."""
+
+    batch_tile: int = 1          # images per grid step (0 = whole batch)
+    cout_block: int = 0          # output channels per grid step (0 = all)
+    bm: int = 0                  # matmul tiles (0 = kernel default)
+    bn: int = 0
+    bk: int = 0
+
+    def normalize(self, n: int, cout: int) -> "KernelConfig":
+        """Snap the conv knobs to legal divisors of the actual call shapes
+        (batch ``n``, output channels ``cout``).  A config tuned at one
+        bucket stays legal at every other bucket."""
+        bt = n if self.batch_tile == 0 else \
+            largest_divisor_leq(n, self.batch_tile)
+        cb = cout if self.cout_block == 0 else \
+            largest_divisor_leq(cout, self.cout_block)
+        return dataclasses.replace(self, batch_tile=bt, cout_block=cb)
+
+    def to_dict(self) -> dict:
+        """Compact dict: only non-default fields (stable cache format)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v != f.default:
+                out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in known})
+
+    def describe(self) -> str:
+        d = self.to_dict()
+        return "default" if not d else \
+            ",".join(f"{k}={v}" for k, v in sorted(d.items()))
+
+
+DEFAULT = KernelConfig()

@@ -1,0 +1,108 @@
+"""Analytic cost model — stage 1 of the two-stage search.
+
+Ranks candidate configs without touching the device: a roofline over the
+dataflow module's HBM-traffic formulas.  Per task,
+
+    time ~ max(MACs / PEAK_MACS,  HBM bytes / HBM_BW)  +  steps * STEP_COST
+
+where the HBM bytes come from ``core.dataflow.conv_task_hbm_bytes`` /
+``resblock_task_hbm_bytes`` (activations move once; filters are re-fetched
+per batch-grid step — the term ``batch_tile`` amortizes) and ``steps`` is
+the grid size (each grid step pays a fixed launch/prologue cost, so a config
+that shreds the batch into many tiny steps loses even when its traffic
+ties).  The constants are v5e-class; only their *ratios* matter, because the
+model is used to rank candidates, never to predict wall time.  Stage 2
+(``tune.search``) times the top-K survivors for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import dataflow
+from repro.tune.config import KernelConfig
+
+# v5e-class ratios: int8 MACs/s, HBM bytes/s, per-grid-step fixed cost.
+PEAK_MACS = 200e12
+HBM_BW = 800e9
+STEP_COST_S = 2e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Cost:
+    """Modeled execution of one task at one config."""
+    macs: int
+    hbm_bytes: int
+    grid_steps: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """MACs per HBM byte — the roofline x-axis."""
+        return self.macs / max(1, self.hbm_bytes)
+
+    @property
+    def modeled_s(self) -> float:
+        return max(self.macs / PEAK_MACS, self.hbm_bytes / HBM_BW) \
+            + self.grid_steps * STEP_COST_S
+
+    def to_dict(self) -> dict:
+        return dict(macs=self.macs, hbm_bytes=self.hbm_bytes,
+                    grid_steps=self.grid_steps,
+                    arithmetic_intensity=round(self.arithmetic_intensity, 3),
+                    modeled_us=round(self.modeled_s * 1e6, 3))
+
+
+def stem_cost(layer: dataflow.ConvLayer, batch: int,
+              config: KernelConfig) -> Cost:
+    c = config.normalize(batch, layer.och)
+    steps = (batch // c.batch_tile) * (layer.och // c.cout_block)
+    return Cost(macs=batch * layer.macs,
+                hbm_bytes=dataflow.conv_task_hbm_bytes(
+                    layer, batch, c.batch_tile),
+                grid_steps=steps)
+
+
+def block_cost(layer0: dataflow.ConvLayer, batch: int, config: KernelConfig,
+               downsample: bool = False, fused: bool = True) -> Cost:
+    """One residual block (conv0 + conv1 + optional ds) as the fused kernel
+    executes it.  ``fused=False`` models the same block on the unfused
+    dataflow (every intermediate round-trips HBM) — the A/B the cost-model
+    sanity test pins: fusion must rank strictly cheaper."""
+    c = config.normalize(batch, layer0.och)
+    h, w, ich, och = layer0.ih, layer0.iw, layer0.ich, layer0.och
+    macs = layer0.macs + (h // layer0.stride) ** 2 * och * och * 9
+    if downsample:
+        macs += (h // layer0.stride) ** 2 * ich * och
+    if fused:
+        hbm = dataflow.resblock_task_hbm_bytes(
+            h, w, ich, och, batch, c.batch_tile, downsample=downsample,
+            stride=layer0.stride)
+        steps = batch // c.batch_tile
+    else:
+        hbm = batch * dataflow.residual_block_hbm_bytes(
+            h, w, ich, och, fused=False, downsample=downsample,
+            stride=layer0.stride)
+        # unfused = one kernel per conv (+ds, +add): each re-reads weights
+        wts = 9 * ich * och + 9 * och * och + (ich * och if downsample else 0)
+        hbm += wts * (batch // c.batch_tile)
+        steps = (batch // c.batch_tile) * (4 if downsample else 3)
+    return Cost(macs=batch * macs, hbm_bytes=hbm, grid_steps=steps)
+
+
+def model_cost(cfg, batch: int,
+               tuning: Dict[str, KernelConfig]) -> Dict[str, Cost]:
+    """Per-task modeled cost of one whole-model tuning assignment."""
+    layers = {l.name: l for l in dataflow.resnet_layers(
+        cfg.blocks_per_stage, cfg.base_width, cfg.img)}
+    default = KernelConfig()
+    out = {"stem": stem_cost(layers["stem"], batch,
+                             tuning.get("stem", default))}
+    for i in range(3 * cfg.blocks_per_stage):
+        out[f"block{i}"] = block_cost(
+            layers[f"c{i}_0"], batch, tuning.get(f"block{i}", default),
+            downsample=f"ds{i}" in layers)
+    return out
+
+
+def total_modeled_s(costs: Dict[str, Cost]) -> float:
+    return sum(c.modeled_s for c in costs.values())

@@ -1,0 +1,233 @@
+"""Two-stage design-space search: analytic ranking, then on-device timing.
+
+The software Algorithm 1 (§III-E):
+
+  stage 1  — enumerate the legal per-task space (``tune.space``), rank every
+             candidate with the roofline cost model (``tune.cost``), and
+             assemble K joint model tunings: the analytic best per task, the
+             runner-ups, and always the untuned default (so the device stage
+             can never regress below the shipping config).
+  stage 2  — compile each survivor through ``repro.compile`` and race it
+             against the incumbent (the untuned default first) on a probe
+             batch, *interleaved* so host drift cancels; a challenger must
+             measure faster head-to-head to take the crown, so the winner is
+             measured-no-worse than the shipping config.  Off-TPU this times
+             Pallas interpret mode — still real end-to-end executables,
+             which is exactly what serving runs on that host.
+
+The winner is validated bit-exact against the untuned ``lax-int`` reference
+(a tuning may only ever change the schedule, never a single logit bit) and
+persisted in the JSON config cache keyed on (model, shapes, dtype, backend,
+device kind) — the next ``compile_model(..., tune="auto")`` is a cache hit.
+
+``repro.compile`` is imported lazily: ``compile.lowering`` imports
+``tune.config`` at module load, so a top-level back-import would cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import dataflow
+from repro.tune import cache as tcache
+from repro.tune import cost as tcost
+from repro.tune import space as tspace
+from repro.tune.config import KernelConfig
+
+
+def device_kind() -> str:
+    """Cache-key identity of the execution substrate.  Interpret mode is a
+    different device than native TPU — their optima differ wildly."""
+    d = jax.devices()[0]
+    kind = getattr(d, "device_kind", d.platform) or d.platform
+    mode = "native" if jax.default_backend() == "tpu" else "interpret"
+    return f"{d.platform}:{kind}:{mode}".replace(" ", "-")
+
+
+def model_key(cfg, batch: int, backend: str) -> str:
+    return tcache.cache_key(f"model:{cfg.name}",
+                            ((batch, cfg.img, cfg.img, 3),),
+                            "float32", backend, device_kind())
+
+
+@dataclasses.dataclass
+class TuneResult:
+    """What the search decided and why — everything ``benchmarks/run.py
+    --json`` needs to attribute a perf change to a config change."""
+    model: str
+    backend: str
+    batch: int
+    tuning: Dict[str, KernelConfig]
+    source: str                        # "cache" | "analytic" | "device"
+    space_size: int                    # joint-space cardinality pre-pruning
+    candidates: int                    # joint candidates actually considered
+    modeled: Dict[str, dict]           # task -> Cost.to_dict() of the winner
+    timings_us: Dict[str, float]       # stage-2 measurements per candidate
+    cache_stats: dict
+
+    def config_dict(self) -> Dict[str, dict]:
+        return {task: c.to_dict() for task, c in self.tuning.items()}
+
+    def describe(self) -> str:
+        parts = [f"{t}:{c.describe()}" for t, c in sorted(self.tuning.items())
+                 if c.to_dict()]
+        return ";".join(parts) or "default"
+
+    def to_dict(self) -> dict:
+        return dict(model=self.model, backend=self.backend, batch=self.batch,
+                    source=self.source, space_size=self.space_size,
+                    candidates=self.candidates, tuning=self.config_dict(),
+                    modeled=self.modeled, timings_us=self.timings_us,
+                    cache=self.cache_stats)
+
+
+def rank_spaces(cfg, batch: int,
+                spaces: Dict[str, List[KernelConfig]]
+                ) -> Dict[str, List[KernelConfig]]:
+    """Stage 1: each task's candidates ordered by modeled time."""
+    layers = {l.name: l for l in dataflow.resnet_layers(
+        cfg.blocks_per_stage, cfg.base_width, cfg.img)}
+    ranked = {}
+    for task, cands in spaces.items():
+        if task == "stem":
+            def keyf(c):
+                return tcost.stem_cost(layers["stem"], batch, c).modeled_s
+        else:
+            i = int(task[len("block"):])
+            l0, ds = layers[f"c{i}_0"], f"ds{i}" in layers
+
+            def keyf(c, l0=l0, ds=ds):
+                return tcost.block_cost(l0, batch, c,
+                                        downsample=ds).modeled_s
+        ranked[task] = sorted(cands, key=keyf)
+    return ranked
+
+
+def joint_candidates(ranked: Dict[str, List[KernelConfig]], top_k: int
+                     ) -> List[Dict[str, KernelConfig]]:
+    """K joint tunings from the per-task rankings (rank j across every task,
+    clamped to each task's space), plus the untuned default — deduplicated,
+    analytic-best first."""
+    out = []
+    for j in range(max(1, top_k)):
+        cand = {task: lst[min(j, len(lst) - 1)]
+                for task, lst in ranked.items() if lst}
+        if cand not in out:
+            out.append(cand)
+    default = {task: KernelConfig() for task in ranked}
+    if default not in out:
+        out.append(default)
+    return out
+
+
+def _probe_images(cfg, batch: int):
+    rng = np.random.default_rng(0)
+    return rng.random((batch, cfg.img, cfg.img, 3)).astype(np.float32)
+
+
+def interleaved_time(cm_a, cm_b, probe, reps: int = 3):
+    """Median wall time (us) of two compiled models, measured *interleaved*
+    (a, b, a, b, ...) so slow drift of the host — the dominant noise source
+    for interpret-mode timings — hits both sides equally.  Returns
+    (us_a, us_b)."""
+    jax.block_until_ready(cm_a(probe))             # compile + warm
+    jax.block_until_ready(cm_b(probe))
+    ta, tb = [], []
+    for _ in range(max(1, reps)):
+        for cm, ts in ((cm_a, ta), (cm_b, tb)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(cm(probe))
+            ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ta)), float(np.median(tb))
+
+
+def _label(tuning: Dict[str, KernelConfig]) -> str:
+    return ";".join(f"{t}:{c.describe()}" for t, c in sorted(tuning.items())
+                    if c.to_dict()) or "default"
+
+
+def search(cfg, qparams, backend: str = "pallas", batch: int = 8,
+           top_k: int = 3, device: bool = True, validate: bool = True,
+           cache: Optional[tcache.TuneCache] = None,
+           use_cache: bool = True, reps: int = 3) -> TuneResult:
+    """Find the per-task ``KernelConfig`` assignment for ``cfg`` at one batch
+    bucket.  ``device=False`` stops after the analytic stage — no device
+    *timing*; the bit-exactness probe still compiles one small tuned/ref
+    executable pair unless ``validate=False`` too (pass both for a
+    build-nothing structural smoke).  The result is served from / written to
+    the JSON config cache unless ``use_cache=False``."""
+    cache = cache if cache is not None else tcache.TuneCache()
+    key = model_key(cfg, batch, backend)
+    if use_cache:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuneResult(
+                model=cfg.name, backend=backend, batch=batch, tuning=hit,
+                source="cache", space_size=0, candidates=0,
+                modeled={t: c.to_dict()
+                         for t, c in tcost.model_cost(cfg, batch, hit).items()},
+                timings_us={}, cache_stats=cache.stats())
+
+    spaces = tspace.model_space(cfg, batch)
+    ranked = rank_spaces(cfg, batch, spaces)
+    cands = joint_candidates(ranked, top_k)
+
+    timings: Dict[str, float] = {}
+    if device:
+        from repro.compile import compile_model
+        probe = _probe_images(cfg, batch)
+        # king-of-the-hill with the DEFAULT as the first incumbent: every
+        # challenger must beat the incumbent in an interleaved head-to-head,
+        # so the winner is measured-no-worse than the shipping config
+        default = {task: KernelConfig() for task in ranked}
+        incumbent, inc_cm = default, compile_model(
+            cfg, qparams, backend=backend, batch_sizes=(batch,),
+            tune=default)
+        for tuning in cands:
+            if tuning == incumbent:
+                continue
+            cm = compile_model(cfg, qparams, backend=backend,
+                               batch_sizes=(batch,), tune=tuning)
+            us_c, us_inc = interleaved_time(cm, inc_cm, probe, reps=reps)
+            timings[_label(tuning)] = round(us_c, 1)
+            timings[_label(incumbent)] = round(us_inc, 1)
+            if us_c < us_inc:
+                incumbent, inc_cm = tuning, cm
+        tuning, best_cm, source = incumbent, inc_cm, "device"
+        if validate:
+            ref_cm = compile_model(cfg, qparams, backend="lax-int",
+                                   batch_sizes=(batch,))
+            if not np.array_equal(np.asarray(best_cm(probe)),
+                                  np.asarray(ref_cm(probe))):
+                # a tuning must never change a logit bit; fall back to the
+                # shipping default rather than serve wrong numbers
+                tuning = {task: KernelConfig() for task in ranked}
+                source = "device-fallback"
+    else:
+        tuning, source = cands[0], "analytic"
+        if validate:
+            from repro.compile import compile_model
+            probe = _probe_images(cfg, min(batch, 2))
+            got = compile_model(cfg, qparams, backend=backend,
+                                batch_sizes=(probe.shape[0],),
+                                tune=tuning)(probe)
+            ref = compile_model(cfg, qparams, backend="lax-int",
+                                batch_sizes=(probe.shape[0],))(probe)
+            if not np.array_equal(np.asarray(got), np.asarray(ref)):
+                tuning, source = ({task: KernelConfig() for task in ranked},
+                                  "analytic-fallback")
+
+    if use_cache:
+        cache.put(key, tuning)
+        cache.save()
+    return TuneResult(
+        model=cfg.name, backend=backend, batch=batch, tuning=tuning,
+        source=source, space_size=tspace.space_size(spaces),
+        candidates=len(cands),
+        modeled={t: c.to_dict()
+                 for t, c in tcost.model_cost(cfg, batch, tuning).items()},
+        timings_us=timings, cache_stats=cache.stats())

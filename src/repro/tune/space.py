@@ -1,0 +1,104 @@
+"""Design-space enumeration: the legal ``KernelConfig`` set per graph task.
+
+The software CDSE front half (paper §III-E, Algorithm 1's candidate set):
+for every task of the lowering plan — the stem kernel and one fused
+residual-block kernel per block — enumerate the tiling knobs that are
+
+  1. **divisor-legal**: ``batch_tile | N`` and ``cout_block | Cout`` so the
+     Pallas grid tiles the iteration space exactly;
+  2. **VMEM-legal**: the per-grid-step footprint (input tile floored by the
+     eq. 16 window buffer, filter slice, int32 accumulator, output tile —
+     ``core.dataflow.conv_task_vmem_bytes`` / ``resblock_task_vmem_bytes``)
+     fits the per-core budget, the TPU analogue of the BRAM cap;
+  3. **balance-pruned**: channel blocks below the eq. 12-14 balanced unroll
+     (``core.ilp.balanced_och_par``) are dropped — a task tiled below its
+     balanced ``och_par`` is the pipeline bottleneck by construction, so
+     Algorithm 1 would never pick it;
+  4. **fusion-legal**: ``resblock_fused`` never enumerates ``cout_block`` —
+     conv1 consumes all of conv0's channels, so splitting Cout would push
+     the intermediate back through HBM (the traffic the fusion removes).
+
+Structure-only: nothing here touches jax or weights, so the space for a
+model is enumerable in microseconds and trivially testable.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import dataflow, ilp
+from repro.tune.config import KernelConfig
+
+# Per-core VMEM budget (v5e-class ~16 MiB, minus headroom for Mosaic's own
+# scratch).  CIFAR-scale tiles are far below this; the cap exists so the
+# enumerator stays legal for larger inputs.
+VMEM_BUDGET = 12 * 2**20
+
+
+def divisors(n: int) -> List[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def stem_space(layer: dataflow.ConvLayer, batch: int, cout_floor: int = 1,
+               vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal (batch_tile, cout_block) grid for the stem conv kernel."""
+    floor = min(cout_floor, layer.och)
+    out = []
+    for bt in divisors(batch):
+        for cb in divisors(layer.och):
+            if cb < floor:
+                continue                      # balance-pruned (eq. 12-14)
+            if dataflow.conv_task_vmem_bytes(layer, bt, cb) > vmem_budget:
+                continue
+            out.append(KernelConfig(batch_tile=bt, cout_block=cb))
+    return out
+
+
+def block_space(layer0: dataflow.ConvLayer, batch: int,
+                downsample: bool = False,
+                vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal batch tilings for one fused residual block (``layer0`` is the
+    block's conv0 row of ``dataflow.resnet_layers``).  Channel blocking is
+    fusion-illegal here (rule 4)."""
+    out = []
+    for bt in divisors(batch):
+        vmem = dataflow.resblock_task_vmem_bytes(
+            layer0.ih, layer0.iw, layer0.ich, layer0.och, bt,
+            downsample=downsample, stride=layer0.stride)
+        if vmem <= vmem_budget:
+            out.append(KernelConfig(batch_tile=bt))
+    return out
+
+
+def model_space(cfg, batch: int,
+                vmem_budget: int = VMEM_BUDGET
+                ) -> Dict[str, List[KernelConfig]]:
+    """Per-task legal configs for a ResNetConfig at one batch bucket.
+
+    Keys match the lowering plan: ``"stem"`` and ``"block{i}"``.  Every
+    returned config is bit-exact with the default by the kernel contract
+    (asserted config-by-config in tests/test_tune.py).
+    """
+    layers = dataflow.resnet_layers(cfg.blocks_per_stage, cfg.base_width,
+                                    cfg.img)
+    balanced = dict(zip((l.name for l in layers),
+                        ilp.balanced_och_par(layers, pow2=True)))
+    spaces = {"stem": stem_space(layers[0], batch,
+                                 cout_floor=balanced["stem"],
+                                 vmem_budget=vmem_budget)}
+    by_name = {l.name: l for l in layers}
+    n_blocks = 3 * cfg.blocks_per_stage
+    for i in range(n_blocks):
+        l0 = by_name[f"c{i}_0"]
+        spaces[f"block{i}"] = block_space(
+            l0, batch, downsample=f"ds{i}" in by_name,
+            vmem_budget=vmem_budget)
+    return spaces
+
+
+def space_size(spaces: Dict[str, List[KernelConfig]]) -> int:
+    """Cardinality of the joint design space (product over tasks) — what an
+    exhaustive search would have to time on device."""
+    total = 1
+    for cands in spaces.values():
+        total *= max(1, len(cands))
+    return total
