@@ -70,6 +70,9 @@ class CompiledModel:
         self._forward = backend.lower(self.graph, cfg, params)
         self._donate = bool(_donate_argnums())
         self._execs: Dict[int, Callable] = {}
+        self._dev_execs: Dict[tuple, Callable] = {}
+        self._shard_execs: Dict[tuple, Callable] = {}
+        self._shard_lowered: Dict[tuple, Callable] = {}
         self.trace_counts: Dict[int, int] = {}
         self.compile_count = 0
 
@@ -81,9 +84,12 @@ class CompiledModel:
         self.trace_counts[bs] = self.trace_counts.get(bs, 0) + 1
         return self._forward(images)
 
-    def input_spec(self, batch: int) -> jax.ShapeDtypeStruct:
+    def input_spec(self, batch: int, sharding=None) -> jax.ShapeDtypeStruct:
+        """THE input-shape contract of every executable this model compiles
+        (default, per-device, and SPMD placements all lower from here)."""
         return jax.ShapeDtypeStruct(
-            (batch, self.cfg.img, self.cfg.img, 3), jnp.float32)
+            (batch, self.cfg.img, self.cfg.img, 3), jnp.float32,
+            sharding=sharding)
 
     def executable(self, batch: int) -> Callable:
         """The AOT-compiled executable for one bucket (compiled on first use,
@@ -103,6 +109,111 @@ class CompiledModel:
             self.executable(b)
         return self
 
+    # -- placement (replica pools / sharded serving) ------------------------
+
+    def device_executable(self, batch: int, device) -> Callable:
+        """The AOT executable for one bucket pinned to ``device``.
+
+        This is how a replica pool instantiates the model per-device: the
+        lowering (graph walk + backend closure) is shared, only the XLA
+        compile is per-device, and the closed-over weights materialize on
+        that device as executable constants — each replica holds its own
+        full weight copy, like each replicated FPGA pipeline holds its
+        weights in its own BRAM."""
+        if batch not in self.batch_sizes:
+            raise ValueError(
+                f"batch {batch} is not a compiled bucket {self.batch_sizes}")
+        key = (int(batch), device)
+        if key not in self._dev_execs:
+            jitted = jax.jit(self._staged, donate_argnums=_donate_argnums())
+            spec = self.input_spec(
+                batch, sharding=jax.sharding.SingleDeviceSharding(device))
+            self._dev_execs[key] = jitted.lower(spec).compile()
+            self.compile_count += 1
+        return self._dev_execs[key]
+
+    def run_placed(self, images, device) -> jnp.ndarray:
+        """``__call__`` pinned to one device: the shared batching discipline
+        plus a device_put.  Bit-exact with the default path — placement
+        never changes the arithmetic."""
+        def rb(imgs, bucket, padded):
+            placed = jax.device_put(imgs, device)
+            if self._donate and not padded:
+                # same donation guard as __call__.  The copy must be
+                # unconditional: device_put of an array already committed to
+                # `device` returns a NEW object aliasing the SAME buffer, so
+                # no identity/no-op check can detect the caller's buffer
+                placed = jnp.array(placed, copy=True)
+            return self.device_executable(bucket, device)(placed)
+
+        return self._run_batched(images, self.batch_sizes, rb)
+
+    def shard_executable(self, mesh, batch: int, axis: str = "data"):
+        """One SPMD executable over ``mesh``: the batch dim sharded over
+        ``axis`` via shard_map, weights replicated onto every mesh device
+        (``parallel.sharding.replicated_shardings``).  ``batch`` must divide
+        evenly over the axis.  This is the synchronized data-parallel path —
+        one program, all replicas in lockstep — as opposed to the replica
+        pool's independent per-device executables."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel._compat import shard_map
+        from repro.parallel.sharding import axis_size, replicated_shardings
+
+        n_dev = axis_size(mesh, axis)
+        if batch not in self.batch_sizes:
+            raise ValueError(
+                f"batch {batch} is not a compiled bucket {self.batch_sizes}")
+        if batch % n_dev != 0:
+            raise ValueError(
+                f"bucket {batch} must be divisible by mesh axis "
+                f"{axis!r} (size {n_dev})")
+        devs = tuple(np.asarray(mesh.devices).flat)
+        # the mesh's axis structure is part of the key: two meshes over the
+        # same device set (e.g. 4x1 'data' vs 2x2 'data','model') compile
+        # different input shardings
+        key = (int(batch), axis, tuple(mesh.shape.items()), devs)
+        if key not in self._shard_execs:
+            # the weight broadcast + backend closure depend only on the
+            # mesh, not the bucket: lower once per mesh, share across
+            # buckets (the class's lowered-once contract)
+            lkey = (axis, devs)
+            if lkey not in self._shard_lowered:
+                placed = jax.device_put(
+                    self.params, replicated_shardings(self.params, mesh))
+                self._shard_lowered[lkey] = self.backend.lower(
+                    self.graph, self.cfg, placed)
+            smapped = shard_map(self._shard_lowered[lkey], mesh=mesh,
+                                in_specs=P(axis), out_specs=P(axis),
+                                check_vma=False)
+            spec = self.input_spec(
+                batch, sharding=NamedSharding(mesh, P(axis)))
+            self._shard_execs[key] = jax.jit(smapped).lower(spec).compile()
+            self.compile_count += 1
+        return self._shard_execs[key]
+
+    def run_sharded(self, images, mesh, axis: str = "data") -> jnp.ndarray:
+        """Run one batch through the SPMD executable with the shared bucket
+        discipline, restricted to buckets that divide over the mesh axis.
+        Bounded executable count, no shape-polymorphic recompiles on the
+        serving path.  (The SPMD executable does not donate its input, so
+        no copy guard is needed here.)"""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.parallel.sharding import axis_size
+
+        n_dev = axis_size(mesh, axis)
+        fits = [b for b in self.batch_sizes if b % n_dev == 0]
+        if not fits:
+            raise ValueError(
+                f"no compiled bucket in {self.batch_sizes} divides over "
+                f"mesh axis {axis!r} (size {n_dev})")
+
+        def rb(imgs, bucket, padded):
+            imgs = jax.device_put(imgs, NamedSharding(mesh, P(axis)))
+            return self.shard_executable(mesh, bucket, axis)(imgs)
+
+        return self._run_batched(images, fits, rb)
+
     # -- dispatch -----------------------------------------------------------
 
     def bucket_for(self, n: int) -> int:
@@ -113,29 +224,37 @@ class CompiledModel:
                 return b
         return self.batch_sizes[-1]
 
-    def _run_bucket(self, imgs: jnp.ndarray) -> jnp.ndarray:
-        n = imgs.shape[0]
-        bucket = self.bucket_for(n)
-        if n < bucket:
-            imgs = jnp.concatenate(
-                [imgs, jnp.zeros((bucket - n,) + imgs.shape[1:],
-                                 imgs.dtype)], axis=0)
-        elif self._donate:
-            # the executable donates its input buffer; never hand it the
-            # caller's array (the padded branch already made a fresh one)
-            imgs = jnp.array(imgs, copy=True)
-        return self.executable(bucket)(imgs)[:n]
-
-    def __call__(self, images) -> jnp.ndarray:
+    def _run_batched(self, images, buckets, run_bucket) -> jnp.ndarray:
+        """THE one home for the serving batching discipline, shared by
+        ``__call__``/``run_placed``/``run_sharded``: select the smallest
+        bucket >= n from ``buckets``, zero-pad up to it, chunk batches
+        beyond the largest bucket, slice the pad rows off the logits.
+        ``run_bucket(imgs, bucket, padded)`` executes one full bucket."""
         images = jnp.asarray(images, jnp.float32)
         n = images.shape[0]
         if n == 0:
             raise ValueError("empty batch")
-        cap = self.batch_sizes[-1]
-        if n <= cap:
-            return self._run_bucket(images)
-        outs = [self._run_bucket(images[i:i + cap]) for i in range(0, n, cap)]
-        return jnp.concatenate(outs, axis=0)
+        cap = buckets[-1]
+        if n > cap:
+            outs = [self._run_batched(images[i:i + cap], buckets, run_bucket)
+                    for i in range(0, n, cap)]
+            return jnp.concatenate(outs, axis=0)
+        bucket = next(b for b in buckets if b >= n)
+        if n < bucket:
+            images = jnp.concatenate(
+                [images, jnp.zeros((bucket - n,) + images.shape[1:],
+                                   images.dtype)], axis=0)
+        return run_bucket(images, bucket, n < bucket)[:n]
+
+    def __call__(self, images) -> jnp.ndarray:
+        def rb(imgs, bucket, padded):
+            if self._donate and not padded:
+                # the executable donates its input buffer; never hand it
+                # the caller's array (the padded branch made a fresh one)
+                imgs = jnp.array(imgs, copy=True)
+            return self.executable(bucket)(imgs)
+
+        return self._run_batched(images, self.batch_sizes, rb)
 
     # -- introspection ------------------------------------------------------
 
@@ -143,6 +262,7 @@ class CompiledModel:
         return dict(backend=self.backend.name,
                     batch_sizes=self.batch_sizes,
                     compiled=sorted(self._execs),
+                    placed=sorted((b, str(d)) for b, d in self._dev_execs),
                     compile_count=self.compile_count,
                     trace_counts=dict(self.trace_counts),
                     tuning={t: c.to_dict()

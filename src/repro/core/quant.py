@@ -185,10 +185,13 @@ def qdot_int32(xq: jnp.ndarray, wq: jnp.ndarray, dimension_numbers=None) -> jnp.
 
 def shift_align(acc: jnp.ndarray, shift: int) -> jnp.ndarray:
     """Rescale an int32 accumulator by 2**shift into a *finer* domain:
-    left shift for shift >= 0, rounding (half-away) right shift for
-    shift < 0.  This is the skip-stream alignment of the add-fold (the skip
-    enters the next conv's product domain); shared by int_forward, the fused
-    kernels, and their oracles so the rounding semantics have one home."""
+    left shift for shift >= 0, rounding right shift for shift < 0 using the
+    hardware idiom ``(acc + half) >> s`` — i.e. ``floor(x + 0.5)``, ties
+    toward +infinity (so -0.5 -> 0, not -1; pinned in
+    tests/test_quant_props.py).  This is the skip-stream alignment of the
+    add-fold (the skip enters the next conv's product domain); shared by
+    int_forward, the fused kernels, and their oracles so the rounding
+    semantics have one home."""
     if shift >= 0:
         return acc.astype(jnp.int32) << shift
     half = jnp.int32(1) << (-shift - 1)
@@ -196,8 +199,9 @@ def shift_align(acc: jnp.ndarray, shift: int) -> jnp.ndarray:
 
 
 def requantize_shift(acc: jnp.ndarray, from_exp: int, to_spec: QSpec) -> jnp.ndarray:
-    """int32 accumulator (scale 2**from_exp) -> int in ``to_spec`` domain via a
-    bit shift with round-half-away — pure integer arithmetic (the hardware op)."""
+    """int32 accumulator (scale 2**from_exp) -> int in ``to_spec`` domain via
+    a rounding bit shift (``(acc + half) >> s`` = floor(x + 0.5), ties toward
+    +infinity) — pure integer arithmetic (the hardware op)."""
     shift = to_spec.exp - from_exp
     if shift <= 0:
         q = acc.astype(jnp.int32) << (-shift)

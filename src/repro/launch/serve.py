@@ -10,6 +10,12 @@ the optimized graph lowered once per batch bucket, served by ResNetEngine):
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet8 \
         --backend pallas --requests 64 --batch 8 --buckets 1,8
+
+Scale-out serving (replica pool + deadline-based batch coalescing; one
+model replica per device, least-loaded dispatch, p50/p99 latency split):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet8 \
+        --replicas 2 --slack-ms 5 --deadline-ms 50 --requests 64 --batch 8
 """
 from __future__ import annotations
 
@@ -45,6 +51,42 @@ def serve_lm(args):
         print(f"  req {r.rid}: {r.out[:10]}")
 
 
+def serve_resnet_sharded(args, cfg, qp, buckets):
+    """Replica-pool serving: one compiled replica per device, deadline-based
+    coalescing, least-loaded dispatch."""
+    from repro.serve.engine import ImageRequest, ShardedResNetEngine
+
+    if args.ab:
+        raise SystemExit(
+            "--ab shadow backends are not supported with --replicas yet; "
+            "run the A/B probe on the single-device engine (drop --replicas)")
+    eng = ShardedResNetEngine(
+        cfg, qp, batch=args.batch, backend=args.backend,
+        replicas=args.replicas, batch_sizes=buckets,
+        slack_ms=args.slack_ms, tune=args.tune or None)
+    if eng.tuning:
+        print(f"  tuned: {({t: c.to_dict() for t, c in eng.tuning.items()})}")
+    eng.pool.warmup()                 # serve-only timings below
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for i in range(args.requests):
+        eng.submit(ImageRequest(
+            rid=i, image=rng.random((cfg.img, cfg.img, 3), np.float32)),
+            deadline_ms=args.deadline_ms or None)
+    ticks = eng.run()
+    dt = time.time() - t0
+    st = eng.latency_stats()
+    print(f"served {eng.served} images in {ticks} ticks, {dt:.2f}s "
+          f"({eng.served/dt:.1f} img/s) via backend={args.backend!r} "
+          f"x{len(eng.pool)} replicas")
+    print(f"  queue wait ms p50/p99: {st['queue_wait_ms']['p50']:.2f}/"
+          f"{st['queue_wait_ms']['p99']:.2f}   compute ms p50/p99: "
+          f"{st['compute_ms']['p50']:.2f}/{st['compute_ms']['p99']:.2f}")
+    print(f"  deadlines: {st['deadline_total'] - st['deadline_misses']}/"
+          f"{st['deadline_total']} met; per-replica served: "
+          f"{[r['served'] for r in st['replicas']]}")
+
+
 def serve_resnet(args):
     from repro.models import resnet as R
     from repro.serve.engine import ImageRequest, ResNetEngine
@@ -54,6 +96,8 @@ def serve_resnet(args):
     qp = R.quantize_params(R.fold_params(params), cfg)
     buckets = tuple(int(b) for b in args.buckets.split(",")) if args.buckets \
         else (args.batch,)
+    if args.replicas:
+        return serve_resnet_sharded(args, cfg, qp, buckets)
     eng = ResNetEngine(cfg, qp, batch=args.batch, backend=args.backend,
                        batch_sizes=buckets,
                        ab_backends=tuple(
@@ -67,7 +111,7 @@ def serve_resnet(args):
     eng.model.warmup()
     for shadow in eng.shadows.values():
         shadow.warmup()
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         eng.submit(ImageRequest(
             rid=i, image=rng.random((cfg.img, cfg.img, 3), np.float32)))
@@ -99,6 +143,18 @@ def main():
                     help="resnet: a repro.compile registered backend")
     ap.add_argument("--ab", default="",
                     help="resnet: comma-separated shadow backends to A/B")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="resnet: serve through a replica pool of this many "
+                         "devices (0 = single-device ResNetEngine)")
+    ap.add_argument("--slack-ms", type=float, default=5.0,
+                    help="resnet: batch-coalescing window — how long a "
+                         "micro-batch may be held open waiting to fill "
+                         "(larger = better throughput, worse p99 wait)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="resnet: per-request completion deadline (0 = "
+                         "best-effort under --slack-ms only)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="resnet: RNG seed for the synthetic request images")
     ap.add_argument("--tune", default="",
                     choices=("", "auto", "analytic", "device"),
                     help="resnet: kernel autotuning — 'auto' serves from the "

@@ -16,9 +16,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def axis_size(mesh: Mesh, name) -> int:
+    """Product of the named axes' sizes; an axis absent from the mesh counts
+    as 1, so the sharding rules degrade gracefully on reduced meshes (e.g. a
+    data-only serving mesh has no 'model' axis — TP just becomes a no-op)."""
     if isinstance(name, (tuple, list)):
-        return int(np.prod([mesh.shape[n] for n in name]))
-    return mesh.shape[name]
+        return int(np.prod([mesh.shape.get(n, 1) for n in name]))
+    return mesh.shape.get(name, 1)
 
 
 def param_spec(path: str, shape, mesh: Mesh, *, fsdp_axis="data",
@@ -33,6 +36,10 @@ def param_spec(path: str, shape, mesh: Mesh, *, fsdp_axis="data",
     Embeddings shard vocab over TP.  Norms/bias/small tensors replicate.
     """
     ndim = len(shape)
+    # an axis absent from the mesh (or of size 1) is never *named* in a
+    # spec — naming an unknown axis makes NamedSharding raise — so on
+    # reduced meshes (e.g. a data-only serving mesh) TP/FSDP degrade to
+    # no-ops instead of crashing
     tp = axis_size(mesh, tp_axis)
     fsdp = axis_size(mesh, fsdp_axis)
     size = int(np.prod(shape))
@@ -45,17 +52,21 @@ def param_spec(path: str, shape, mesh: Mesh, *, fsdp_axis="data",
         # vocab-sharded view (models/transformer.loss paths).  Sharding the
         # gather's vocab dim makes XLA SPMD replicate the table (observed:
         # "Involuntary full rematerialization" warnings + GB-scale gathers).
-        if shape[1] % tp == 0:
+        if tp > 1 and shape[1] % tp == 0:
             spec[1] = tp_axis
         return P(*spec)
     if ndim >= 2:
-        if shape[-1] % tp == 0:
+        if tp > 1 and shape[-1] % tp == 0:
             spec[-1] = tp_axis
-        if size >= min_size_fsdp and shape[-2] % fsdp == 0:
-            spec[-2] = fsdp_axis
-        elif shape[-1] % (tp * fsdp) == 0 and spec[-1] is not None and \
-                size >= min_size_fsdp:
-            spec[-1] = (fsdp_axis, tp_axis)
+        if fsdp > 1 and size >= min_size_fsdp:
+            if shape[-2] % fsdp == 0:
+                spec[-2] = fsdp_axis
+            elif shape[-1] % (tp * fsdp) == 0:
+                # last-dim fallback: stack FSDP onto the TP dim, or take the
+                # last dim alone when TP is degenerate (tp == 1 — a spec must
+                # never name a size-1/absent axis)
+                spec[-1] = (fsdp_axis, tp_axis) if spec[-1] is not None \
+                    else fsdp_axis
         return P(*spec)
     # 1D big vectors (e.g. stacked biases): replicate
     return P(*spec)
@@ -82,6 +93,18 @@ def params_shardings(param_tree, mesh: Mesh, **kw):
     return jax.tree_util.tree_map_with_path(one, param_tree)
 
 
+def replicated_shardings(param_tree, mesh: Mesh):
+    """Map every leaf to a fully-replicated NamedSharding on ``mesh``.
+
+    Serving replica pools use this for the weight pytree: each device holds
+    a complete copy (the analogue of every replicated FPGA pipeline keeping
+    its weights in its own BRAM), so any replica can serve any batch with no
+    collective on the critical path.  Contrast ``params_shardings``, which
+    FSDP/TP-shards large tensors for training."""
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()),
+                                  param_tree)
+
+
 # logical input axes -> mesh axes
 def input_sharding_factory(mesh: Mesh):
     """Returns sharding(axes_tuple) for configs.base.input_specs.
@@ -95,17 +118,19 @@ def input_sharding_factory(mesh: Mesh):
     def sharding(shape, axes):
         spec = []
         used_data = False
+        model_n = axis_size(mesh, "model")
         for dim, ax in zip(shape, axes):
             if ax == "batch":
                 n = axis_size(mesh, batch_axes)
-                if dim % n == 0:
+                if batch_axes and dim % n == 0:
                     spec.append(batch_axes if len(batch_axes) > 1
                                 else batch_axes[0])
                     used_data = True
                 else:
                     spec.append(None)
             elif ax == "seq":
-                if not used_data and dim % axis_size(mesh, batch_axes) == 0:
+                if batch_axes and not used_data and \
+                        dim % axis_size(mesh, batch_axes) == 0:
                     # sequence sharding fallback (batch-1 long-context cells)
                     spec.append(batch_axes if len(batch_axes) > 1
                                 else batch_axes[0])
@@ -113,7 +138,7 @@ def input_sharding_factory(mesh: Mesh):
                 else:
                     spec.append(None)
             elif ax in ("heads", "embed"):
-                spec.append("model" if dim % mesh.shape["model"] == 0
+                spec.append("model" if model_n > 1 and dim % model_n == 0
                             else None)
             else:
                 spec.append(None)

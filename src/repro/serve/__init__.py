@@ -1,0 +1,17 @@
+"""``repro.serve`` — serving engines and the scheduling layer.
+
+* ``engine``: :class:`~repro.serve.engine.Engine` (LM continuous batching),
+  :class:`~repro.serve.engine.ResNetEngine` (single-device compiled image
+  serving), :class:`~repro.serve.engine.ShardedResNetEngine` (replica pool +
+  deadline-based batch coalescing).
+* ``sched``: the execution-agnostic scheduling core — injectable clocks,
+  :class:`~repro.serve.sched.BatchCoalescer`,
+  :class:`~repro.serve.sched.Scheduler`,
+  :class:`~repro.serve.sched.ReplicaPool`.
+"""
+from repro.serve.engine import (                         # noqa: F401
+    Engine, ImageRequest, Request, ResNetEngine, ShardedResNetEngine)
+from repro.serve.sched import (                          # noqa: F401
+    Backpressure, BatchCoalescer, Dispatch, FakeClock, LatencyStats,
+    MonotonicClock, ReplicaPool, ReplicaState, ScheduledRequest, Scheduler,
+    SchedulerClosed, least_loaded)

@@ -17,6 +17,7 @@ retracing.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 from typing import List, Optional
 
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.serve import sched as S
 
 
 @dataclasses.dataclass
@@ -127,6 +129,18 @@ class ImageRequest:
     done: bool = False
 
 
+def _validate_image(cfg, req: ImageRequest) -> None:
+    """Every compiled executable is fixed-shape, so a mismatched image can
+    never be batched; rejecting at submit keeps the tick loops total.
+    Shared by both engines so the input contract has one home."""
+    expect = (cfg.img, cfg.img, 3)
+    shape = tuple(np.shape(req.image))
+    if shape != expect:
+        raise ValueError(
+            f"request {req.rid}: image shape {shape} does not match the "
+            f"compiled input shape {expect} for {cfg.name}")
+
+
 class ResNetEngine:
     """Image-classification engine serving entirely through
     :class:`repro.compile.CompiledModel`.
@@ -183,15 +197,8 @@ class ResNetEngine:
         self.served = 0
 
     def submit(self, req: ImageRequest):
-        """Enqueue one request.  Shape is validated here — every compiled
-        executable is fixed-shape, so a mismatched image can never be
-        batched; rejecting at submit keeps ``tick`` total."""
-        expect = (self.cfg.img, self.cfg.img, 3)
-        shape = tuple(np.shape(req.image))
-        if shape != expect:
-            raise ValueError(
-                f"request {req.rid}: image shape {shape} does not match the "
-                f"compiled input shape {expect} for {self.cfg.name}")
+        """Enqueue one request (shape-validated at admission)."""
+        _validate_image(self.cfg, req)
         self.queue.append(req)
 
     def tick(self) -> bool:
@@ -218,3 +225,217 @@ class ResNetEngine:
             self.tick()
             ticks += 1
         return ticks
+
+
+# ---------------------------------------------------------------------------
+# Scale-out serving: replica pool + deadline-based batch coalescing
+# ---------------------------------------------------------------------------
+
+
+class ShardedResNetEngine:
+    """Multi-replica image serving: the ``CompiledModel`` lowered once and
+    instantiated per-device (``repro.serve.sched.ReplicaPool``), fed by a
+    deadline-based batch coalescer (``repro.serve.sched.Scheduler``).
+
+    Request lifecycle (docs/serving.md has the full diagram):
+
+        submit (arrival stamped, optional deadline/priority)
+          -> coalesce (micro-batch held open until a bucket fills or the
+             oldest request's slack is exhausted: ``slack_ms`` best-effort
+             window, or ``deadline - service_estimate`` with a deadline)
+          -> dispatch (least-loaded replica; jax async dispatch, so multiple
+             replicas genuinely overlap on multi-device hosts)
+          -> harvest (block on results, stamp completion, record queue-wait
+             vs compute latency split)
+
+    Bit-exact with the single-device :class:`ResNetEngine` path: replication
+    and coalescing change *where and when* a batch runs, never the
+    arithmetic (asserted in tests/test_serve_sharded.py).
+
+    ``clock`` is injectable (``sched.FakeClock``) so scheduling behavior is
+    simulable; ``max_pending`` bounds admission (``submit`` raises
+    ``sched.Backpressure`` when full; ``submit_async`` awaits instead).
+    """
+
+    def __init__(self, cfg, qparams, batch: int = 8, backend: str = "pallas",
+                 replicas: Optional[int] = None, devices=None,
+                 batch_sizes=None, slack_ms: float = 5.0, clock=None,
+                 max_pending: Optional[int] = None, tune=None,
+                 service_estimate_ms: float = 0.0):
+        from repro.compile import compile_model
+
+        self.cfg, self.batch = cfg, batch
+        self.backend = backend
+        if batch_sizes is None:
+            batch_sizes = (batch,)
+        if batch not in batch_sizes:
+            raise ValueError(
+                f"max batch {batch} must be one of batch_sizes {batch_sizes}")
+        # lowered ONCE; the pool only adds per-device XLA compiles
+        self.model = compile_model(cfg, qparams, backend=backend,
+                                   batch_sizes=batch_sizes, tune=tune)
+        self.tuning = self.model.tuning
+        self.pool = S.ReplicaPool(self.model, devices=devices,
+                                  replicas=replicas)
+        self.sched = S.Scheduler(
+            self.pool.replicas, max_batch=batch, slack_s=slack_ms * 1e-3,
+            clock=clock, max_pending=max_pending,
+            service_estimate_s=service_estimate_ms * 1e-3)
+        self.clock = self.sched.clock
+        self.served = 0
+        self._in_flight: List[tuple] = []       # (Dispatch, logits array)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: ImageRequest, deadline_ms: Optional[float] = None,
+               priority: int = 0) -> S.ScheduledRequest:
+        """Admit one request.  ``deadline_ms`` is relative to now; omit it
+        for best-effort coalescing under the ``slack_ms`` window.  Raises
+        ``sched.Backpressure`` at ``max_pending``."""
+        _validate_image(self.cfg, req)
+        deadline_in = None if deadline_ms is None else deadline_ms * 1e-3
+        return self.sched.submit(req, deadline_in=deadline_in,
+                                 priority=priority)
+
+    async def submit_async(self, req: ImageRequest,
+                           deadline_ms: Optional[float] = None,
+                           priority: int = 0,
+                           retry_s: float = 1e-3) -> S.ScheduledRequest:
+        """``submit`` with backpressure-as-await: when the pending queue is
+        full, yield to the event loop (letting ``run_async`` drain) and
+        retry instead of raising."""
+        while True:
+            try:
+                return self.submit(req, deadline_ms=deadline_ms,
+                                   priority=priority)
+            except S.Backpressure:
+                await asyncio.sleep(retry_s)
+
+    # -- dispatch loop ------------------------------------------------------
+
+    @property
+    def outstanding(self) -> int:
+        return self.sched.outstanding
+
+    def tick(self) -> bool:
+        """One scheduler round: dispatch every due micro-batch (async — the
+        arrays are not blocked on, so replicas overlap), then harvest all
+        in-flight results.  Returns True if any work was done."""
+        dispatched = self._dispatch_due()
+        harvested = self._harvest()
+        return bool(dispatched or harvested)
+
+    def _dispatch_due(self) -> int:
+        n = 0
+        while True:
+            d = self.sched.poll()
+            if d is None:
+                break
+            imgs = np.stack([np.asarray(r.payload.image, np.float32)
+                             for r in d.requests])
+            out = self.pool.run(d.replica.index, imgs)   # async dispatch
+            self._in_flight.append((d, out))
+            n += 1
+        return n
+
+    def _next_ready_index(self) -> Optional[int]:
+        """Index of a dispatch whose result is already materialized, else
+        None.  Harvesting ready-first matters twice: blocking strictly FIFO
+        would stamp a fast replica's completion with a slow replica's wait
+        (inflating compute_ms and the deadline EWMA), and would hold the
+        loop hostage to the slowest replica while due batches could be
+        dispatching to idle ones."""
+        for i, (_, out) in enumerate(self._in_flight):
+            is_ready = getattr(out, "is_ready", None)
+            if is_ready is not None and is_ready():
+                return i
+        return None
+
+    def _harvest(self, block: bool = True) -> int:
+        """Complete every dispatch whose result is ready; when ``block`` and
+        nothing at all was ready, wait on the oldest so the caller always
+        makes progress.  Returns between harvests as soon as the remainder
+        is still computing — the drive loops interleave ``_dispatch_due``
+        so idle replicas never wait head-of-line on a slow one."""
+        n = 0
+        while self._in_flight:
+            i = self._next_ready_index()
+            if i is None:
+                if not block or n > 0:
+                    break         # let the caller dispatch more work first
+                i = 0             # nothing ready anywhere: wait on the oldest
+            d, out = self._in_flight[i]
+            try:
+                logits = np.asarray(jax.block_until_ready(out))
+            except Exception:
+                # a dispatch whose device execution errored must not jam the
+                # head of the line or leak in-flight slots: evict it, release
+                # the scheduler accounting (its requests stay done=False so
+                # callers can see the failure), then surface the error
+                self._in_flight.pop(i)
+                self.sched.complete(d, failed=True)
+                raise
+            self._in_flight.pop(i)
+            self.sched.complete(d)
+            for j, r in enumerate(d.requests):
+                r.payload.logits = logits[j]
+                r.payload.label = int(np.argmax(logits[j]))
+                r.payload.done = True
+            self.served += len(d)
+            n += 1
+        return n
+
+    def run(self, max_ticks: int = 100_000) -> int:
+        """Drive until everything admitted so far is served.  When nothing
+        is due yet (the coalescer is holding a batch open), sleeps the clock
+        to the next dispatch-by time instead of spinning."""
+        ticks = 0
+        while self.outstanding and ticks < max_ticks:
+            if not self.tick():
+                self._sleep_until_due()
+            ticks += 1
+        return ticks
+
+    def _sleep_until_due(self) -> None:
+        due_at = self.sched.next_due_at()
+        if due_at is None:
+            return
+        self.clock.sleep(max(due_at - self.clock.now(), 1e-4))
+
+    async def run_async(self, idle_sleep_s: float = 1e-3) -> int:
+        """Async dispatch loop: serve until the engine is shut down *and*
+        drained.  Producers ``submit``/``submit_async`` concurrently; call
+        ``shutdown()`` to let the loop finish the tail and return.  The
+        blocking wait on device results runs off the event loop, so
+        producers keep filling the next micro-batch during compute."""
+        ticks = 0
+        while not (self.sched.closed and not self.outstanding
+                   and not self._in_flight):
+            progressed = self._dispatch_due() > 0
+            if self._in_flight:
+                progressed |= bool(
+                    await asyncio.to_thread(self._harvest))
+            if progressed:
+                await asyncio.sleep(0)           # yield to producers
+            else:
+                await asyncio.sleep(idle_sleep_s)
+            ticks += 1
+        return ticks
+
+    def shutdown(self) -> None:
+        """Stop admission; pending requests become due immediately and drain
+        through the normal dispatch path (graceful drain)."""
+        self.sched.shutdown()
+
+    # -- introspection ------------------------------------------------------
+
+    def latency_stats(self) -> dict:
+        """p50/p99 queue-wait vs compute split, deadline accounting, and
+        per-replica served/dispatched counts."""
+        return self.sched.summary()
+
+    def stats(self) -> dict:
+        # latency_stats() already carries the per-replica breakdown under
+        # 'replicas'; only add what it doesn't have
+        return dict(model=self.model.stats(), pool_size=len(self.pool),
+                    served=self.served, **self.latency_stats())

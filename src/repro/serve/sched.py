@@ -1,0 +1,475 @@
+"""Deadline-based batch coalescing + replica scheduling for ResNet serving.
+
+The paper's throughput numbers (Table 3: 12971/3254 FPS ResNet8/20 on the
+Ultra96) come from keeping every compute unit saturated under streaming
+traffic.  The software analogue splits into two orthogonal mechanisms, both
+here:
+
+* **Batch coalescing** (:class:`BatchCoalescer`): a micro-batch is held open
+  until either a bucket fills or the *oldest* request's deadline slack is
+  exhausted — the classic latency/throughput dial.  Requests carry an
+  ``arrival`` timestamp and an optional absolute ``deadline``; the coalescer
+  dispatches a batch no later than ``deadline - service_estimate`` so the
+  compute itself still fits before the deadline (when capacity suffices).
+
+* **Replica scheduling** (:class:`Scheduler` + :class:`ReplicaPool`): the
+  compiled model is instantiated once per device (the analogue of the
+  paper's replicated accelerator pipelines); each dispatch goes to the
+  least-loaded replica, with per-replica in-flight accounting.  Results are
+  bit-exact with the single-device path — replication never changes the
+  arithmetic, only where it runs.
+
+Everything in this module is driven by an injectable :class:`Clock`, so the
+scheduling policy is testable under a :class:`FakeClock` simulation with no
+real model, no real time, and no flakiness (tests/test_sched.py).  The
+engine (`serve.engine.ShardedResNetEngine`) wires a real clock, a real
+:class:`ReplicaPool`, and the async dispatch loop around this core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Clocks — injectable time source so scheduling is simulable
+# ---------------------------------------------------------------------------
+
+
+class MonotonicClock:
+    """Wall clock: ``time.monotonic`` + real ``time.sleep``."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class FakeClock:
+    """Deterministic simulation clock: ``sleep`` advances time instantly."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0
+        self._t += dt
+
+    def sleep(self, dt: float) -> None:
+        self.advance(max(dt, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Requests and dispatches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """One admitted request moving through arrive → coalesce → dispatch →
+    complete.  ``payload`` is opaque to the scheduler (the engine stores its
+    ``ImageRequest`` there)."""
+
+    payload: Any
+    seq: int                          # admission order (FIFO tiebreak)
+    arrival: float                    # clock.now() at submit
+    deadline: Optional[float] = None  # absolute; None = best-effort
+    priority: int = 0                 # lower value = more urgent class
+    dispatch_t: Optional[float] = None
+    complete_t: Optional[float] = None
+    replica: Optional[int] = None
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.dispatch_t is None:
+            return None
+        return self.dispatch_t - self.arrival
+
+    @property
+    def compute_time(self) -> Optional[float]:
+        if self.complete_t is None or self.dispatch_t is None:
+            return None
+        return self.complete_t - self.dispatch_t
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        if self.deadline is None:
+            return None
+        if self.complete_t is None:
+            return False
+        return self.complete_t <= self.deadline
+
+
+@dataclasses.dataclass
+class Dispatch:
+    """One micro-batch bound to one replica."""
+
+    requests: List[ScheduledRequest]
+    replica: "ReplicaState"
+    dispatch_t: float
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+class Backpressure(RuntimeError):
+    """Raised by ``submit`` when the pending queue is at ``max_pending`` —
+    the caller must retry later (``submit_async`` awaits instead)."""
+
+
+class SchedulerClosed(RuntimeError):
+    """Raised by ``submit`` after ``shutdown()``: draining, not admitting."""
+
+
+# ---------------------------------------------------------------------------
+# Batch coalescer
+# ---------------------------------------------------------------------------
+
+
+class BatchCoalescer:
+    """Hold a micro-batch open until a bucket fills or slack runs out.
+
+    A request must be *dispatched* by
+
+        ``deadline - service_estimate``    (it has a deadline), or
+        ``arrival + slack``                (best-effort coalescing window)
+
+    ``due(now)`` is True as soon as the batch is full or any pending request
+    has reached its dispatch-by time; ``take()`` then pops up to
+    ``max_batch`` requests, FIFO within each priority class (lower priority
+    value first — stable, so same-class requests keep admission order).
+    """
+
+    def __init__(self, max_batch: int, slack_s: float = 0.005):
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive: {max_batch}")
+        self.max_batch = int(max_batch)
+        self.slack_s = float(slack_s)
+        self.pending: List[ScheduledRequest] = []
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def add(self, sreq: ScheduledRequest) -> None:
+        self.pending.append(sreq)
+
+    def dispatch_by(self, sreq: ScheduledRequest,
+                    service_estimate_s: float = 0.0) -> float:
+        if sreq.deadline is not None:
+            if service_estimate_s <= 0.0:
+                # cold start: with no service-time observation yet, a
+                # deadline cannot be budgeted against — dispatch at once
+                # rather than holding until the deadline and guaranteeing
+                # a miss (the first completion seeds the EWMA)
+                return sreq.arrival
+            return sreq.deadline - service_estimate_s
+        return sreq.arrival + self.slack_s
+
+    def due(self, now: float, service_estimate_s: float = 0.0) -> bool:
+        if len(self.pending) >= self.max_batch:
+            return True
+        return any(self.dispatch_by(r, service_estimate_s) <= now
+                   for r in self.pending)
+
+    def next_due_at(self, service_estimate_s: float = 0.0) -> Optional[float]:
+        """Earliest dispatch-by time over pending requests (None if empty) —
+        how long a driver may sleep before anything can become due."""
+        if not self.pending:
+            return None
+        return min(self.dispatch_by(r, service_estimate_s)
+                   for r in self.pending)
+
+    def take(self) -> List[ScheduledRequest]:
+        """Pop up to ``max_batch`` requests: most urgent priority class
+        first, FIFO (admission order) inside each class."""
+        batch = sorted(self.pending,
+                       key=lambda r: (r.priority, r.seq))[:self.max_batch]
+        taken = {id(r) for r in batch}
+        self.pending = [r for r in self.pending if id(r) not in taken]
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# Replica state + least-loaded selection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ReplicaState:
+    """Bookkeeping for one model replica (one device)."""
+
+    index: int
+    device: Any = None                # jax Device for real pools; None in sims
+    in_flight: int = 0                # requests dispatched, not yet complete
+    dispatched: int = 0               # lifetime request count
+    served: int = 0                   # lifetime completed count
+    failed: int = 0                   # lifetime failed-dispatch count
+
+    @property
+    def load(self) -> int:
+        return self.in_flight
+
+
+def least_loaded(replicas: Sequence[ReplicaState]) -> ReplicaState:
+    """Fewest in-flight requests; ties broken by fewest lifetime dispatches,
+    then lowest index (deterministic)."""
+    return min(replicas, key=lambda r: (r.in_flight, r.dispatched, r.index))
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting
+# ---------------------------------------------------------------------------
+
+
+class LatencyStats:
+    """Per-request queue-wait and compute samples with percentile summary."""
+
+    def __init__(self):
+        self.queue_wait_s: List[float] = []
+        self.compute_s: List[float] = []
+        self.deadline_misses = 0
+        self.deadline_total = 0
+        self.failed = 0                   # requests whose dispatch errored
+
+    def record(self, sreq: ScheduledRequest) -> None:
+        self.queue_wait_s.append(sreq.queue_wait)
+        self.compute_s.append(sreq.compute_time)
+        if sreq.deadline is not None:
+            self.deadline_total += 1
+            if not sreq.deadline_met:
+                self.deadline_misses += 1
+
+    @staticmethod
+    def _pct(xs: List[float]) -> dict:
+        if not xs:
+            return dict(p50=0.0, p99=0.0, max=0.0)
+        a = np.asarray(xs, np.float64) * 1e3          # -> milliseconds
+        return dict(p50=float(np.percentile(a, 50)),
+                    p99=float(np.percentile(a, 99)),
+                    max=float(a.max()))
+
+    def summary(self) -> dict:
+        return dict(count=len(self.queue_wait_s),
+                    queue_wait_ms=self._pct(self.queue_wait_s),
+                    compute_ms=self._pct(self.compute_s),
+                    deadline_misses=self.deadline_misses,
+                    deadline_total=self.deadline_total,
+                    failed=self.failed)
+
+
+# ---------------------------------------------------------------------------
+# The scheduler: coalescer + replicas + clock
+# ---------------------------------------------------------------------------
+
+
+class Scheduler:
+    """Deadline-aware dispatch over a set of replicas.
+
+    Execution-agnostic: ``poll`` hands out a :class:`Dispatch` (requests +
+    chosen replica) and the caller runs it however it likes — the engine on
+    real compiled executables, the tests against a fake service time — then
+    reports back via ``complete``.  The service-time estimate used for
+    deadline headroom is an EWMA over observed per-batch compute times,
+    seeded by ``service_estimate_s``.
+    """
+
+    def __init__(self, replicas, max_batch: int, slack_s: float = 0.005,
+                 clock=None, max_pending: Optional[int] = None,
+                 service_estimate_s: float = 0.0, ewma: float = 0.25):
+        if isinstance(replicas, int):
+            replicas = [ReplicaState(i) for i in range(replicas)]
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas: List[ReplicaState] = list(replicas)
+        self.coalescer = BatchCoalescer(max_batch, slack_s=slack_s)
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.max_pending = max_pending
+        self.service_estimate_s = float(service_estimate_s)
+        self.ewma = float(ewma)
+        self.closed = False
+        self.stats = LatencyStats()
+        self._seq = 0
+        self._in_flight_reqs = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, payload, deadline: Optional[float] = None,
+               deadline_in: Optional[float] = None,
+               priority: int = 0) -> ScheduledRequest:
+        """Admit one request.  ``deadline`` is absolute (clock domain);
+        ``deadline_in`` is relative to now.  Raises :class:`Backpressure`
+        when the pending queue is full and :class:`SchedulerClosed` after
+        ``shutdown()``."""
+        if self.closed:
+            raise SchedulerClosed("scheduler is shut down; draining only")
+        if self.max_pending is not None and \
+                len(self.coalescer) >= self.max_pending:
+            raise Backpressure(
+                f"pending queue at max_pending={self.max_pending}")
+        now = self.clock.now()
+        if deadline_in is not None:
+            if deadline is not None:
+                raise ValueError("pass deadline or deadline_in, not both")
+            deadline = now + deadline_in
+        sreq = ScheduledRequest(payload=payload, seq=self._seq, arrival=now,
+                                deadline=deadline, priority=priority)
+        self._seq += 1
+        self.coalescer.add(sreq)
+        return sreq
+
+    # -- dispatch -----------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return len(self.coalescer)
+
+    @property
+    def in_flight(self) -> int:
+        return self._in_flight_reqs
+
+    @property
+    def outstanding(self) -> int:
+        """Requests admitted but not yet completed."""
+        return self.pending + self._in_flight_reqs
+
+    def poll(self, now: Optional[float] = None) -> Optional[Dispatch]:
+        """Return the next due micro-batch bound to the least-loaded replica,
+        or None when nothing is due yet.  After ``shutdown()`` every pending
+        request is due immediately (graceful drain)."""
+        if not self.coalescer.pending:
+            return None
+        if now is None:
+            now = self.clock.now()
+        if not self.closed and \
+                not self.coalescer.due(now, self.service_estimate_s):
+            return None
+        batch = self.coalescer.take()
+        rep = least_loaded(self.replicas)
+        for r in batch:
+            r.dispatch_t = now
+            r.replica = rep.index
+        rep.in_flight += len(batch)
+        rep.dispatched += len(batch)
+        self._in_flight_reqs += len(batch)
+        return Dispatch(requests=batch, replica=rep, dispatch_t=now)
+
+    def next_due_at(self) -> Optional[float]:
+        return self.coalescer.next_due_at(self.service_estimate_s)
+
+    def complete(self, dispatch: Dispatch, now: Optional[float] = None,
+                 failed: bool = False) -> None:
+        """Report a dispatch finished: releases the replica's in-flight
+        slots and, on success, stamps completion times, records latency and
+        updates the service-time EWMA.  ``failed=True`` (the dispatch
+        errored) only releases the accounting — failed requests must never
+        appear as served, met deadlines, or service-time observations."""
+        if now is None:
+            now = self.clock.now()
+        rep = dispatch.replica
+        rep.in_flight -= len(dispatch)
+        self._in_flight_reqs -= len(dispatch)
+        if failed:
+            rep.failed += len(dispatch)
+            self.stats.failed += len(dispatch)
+            return
+        for r in dispatch.requests:
+            r.complete_t = now
+            self.stats.record(r)
+        rep.served += len(dispatch)
+        observed = now - dispatch.dispatch_t
+        if self.service_estimate_s <= 0.0:
+            self.service_estimate_s = observed
+        else:
+            self.service_estimate_s += self.ewma * \
+                (observed - self.service_estimate_s)
+
+    # -- shutdown -----------------------------------------------------------
+
+    def shutdown(self) -> None:
+        """Stop admitting; everything already pending becomes due and drains
+        through the normal poll/complete cycle."""
+        self.closed = True
+
+    def drain(self, execute: Callable[[Dispatch], None]) -> int:
+        """Graceful shutdown helper: close admission, then run every
+        remaining dispatch through ``execute`` (which must call
+        ``complete``).  Returns the number of dispatches flushed."""
+        self.shutdown()
+        n = 0
+        while True:
+            d = self.poll()
+            if d is None:
+                break
+            execute(d)
+            n += 1
+        return n
+
+    def summary(self) -> dict:
+        return dict(replicas=[dict(index=r.index, served=r.served,
+                                   dispatched=r.dispatched,
+                                   in_flight=r.in_flight, failed=r.failed)
+                              for r in self.replicas],
+                    service_estimate_ms=self.service_estimate_s * 1e3,
+                    **self.stats.summary())
+
+
+# ---------------------------------------------------------------------------
+# Replica pool — one compiled executable set per device
+# ---------------------------------------------------------------------------
+
+
+class ReplicaPool:
+    """A :class:`~repro.compile.CompiledModel` instantiated once per device.
+
+    The model is *lowered* once (graph walk + backend closure); each replica
+    then gets its own per-device AOT executables via
+    ``CompiledModel.device_executable`` — the software analogue of stamping
+    N copies of the accelerator pipeline onto the fabric, each with its own
+    weight copy in BRAM.  ``run`` pins a batch to one replica's device and
+    is bit-exact with the single-device path (replication does not touch the
+    arithmetic).
+    """
+
+    def __init__(self, model, devices: Optional[Sequence] = None,
+                 replicas: Optional[int] = None):
+        import jax
+
+        if devices is None:
+            devices = jax.local_devices()
+        devices = list(devices)
+        if replicas is not None:
+            if len(devices) < replicas:
+                raise ValueError(
+                    f"asked for {replicas} replicas but only {len(devices)} "
+                    f"devices are available: {devices}")
+            devices = devices[:replicas]
+        if not devices:
+            raise ValueError("need at least one device")
+        self.model = model
+        self.devices = list(devices)
+        self.replicas = [ReplicaState(i, device=d)
+                         for i, d in enumerate(self.devices)]
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    def run(self, index: int, images):
+        """Run one batch on replica ``index``'s device (async dispatch: the
+        returned array is not blocked on)."""
+        return self.model.run_placed(images, self.devices[index])
+
+    def warmup(self) -> "ReplicaPool":
+        """Eagerly compile every (bucket, device) executable so serving never
+        pays a compile on the hot path."""
+        for d in self.devices:
+            for b in self.model.batch_sizes:
+                self.model.device_executable(b, d)
+        return self

@@ -150,23 +150,21 @@ def test_unknown_backend_raises():
 # ---------------------------------------------------------------------------
 
 
+# NOTE: compiled pallas-vs-int_forward bit-exactness moved to the
+# cross-backend conformance matrix (tests/test_conformance.py), which covers
+# both archs at every bucket/pad/chunk path and two kernel tilings.
+
+
 @pytest.mark.parametrize("cfg", [R.RESNET8, R.RESNET20],
                          ids=lambda c: c.name)
-@pytest.mark.slow
-def test_compiled_pallas_bit_exact_with_int_forward(cfg, images):
-    """Acceptance: compile_model(cfg, qp, backend='pallas')(imgs) equals
-    int_forward on ResNet8 and ResNet20, bit for bit."""
+def test_compiled_lax_int_matches_int_forward(cfg, images):
+    """The bucketed AOT plumbing (pad/jit/slice) is identity w.r.t. the
+    un-bucketed wrapper on both archs (int_forward IS the lax-int backend,
+    so this pins the compile_model wrapper, not the arithmetic — the
+    cross-backend arithmetic matrix lives in tests/test_conformance.py)."""
     qp = _qparams(cfg, seed=2)
     ref = R.int_forward(qp, cfg, images)
-    cm = C.compile_model(cfg, qp, backend="pallas",
-                         batch_sizes=(images.shape[0],))
-    np.testing.assert_array_equal(np.asarray(cm(images)), np.asarray(ref))
-
-
-def test_compiled_lax_int_matches_int_forward(qp8, images):
-    cfg = R.RESNET8
-    ref = R.int_forward(qp8, cfg, images)
-    cm = C.compile_model(cfg, qp8, backend="lax-int", batch_sizes=(4,))
+    cm = C.compile_model(cfg, qp, backend="lax-int", batch_sizes=(4,))
     np.testing.assert_array_equal(np.asarray(cm(images)), np.asarray(ref))
 
 

@@ -21,17 +21,10 @@ def images():
                               minval=0.0, maxval=0.999)
 
 
-@pytest.mark.parametrize("cfg", [R.RESNET8, R.RESNET20],
-                         ids=lambda c: c.name)
-@pytest.mark.slow
-def test_pallas_forward_bitexact_with_int_forward(cfg, images):
-    """The whole network — stem, every stride-1 block, and every stride-2
-    downsample block of all three stages — through the fused kernels equals
-    the lax integer graph exactly (same int32 accumulators, same shifts)."""
-    qp = _qparams(cfg, seed=2)
-    ref = R.int_forward(qp, cfg, images)
-    got = R.pallas_forward(qp, cfg, images)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+# NOTE: the whole-network pallas-vs-lax-int bit-exactness check now lives in
+# tests/test_conformance.py — one parametrized matrix over {arch} x {tiling
+# config} x {bucket/pad/chunk path} x {backend pair} replaces the ad-hoc
+# single-batch parity test this file used to carry.
 
 
 def test_pallas_forward_covers_downsample_blocks():

@@ -181,6 +181,38 @@ def test_dryrun_minicell_subprocess():
     assert "CELL_OK" in out
 
 
+def test_params_shardings_degrade_gracefully_on_reduced_mesh():
+    """A data-only serving mesh has no 'model' axis: the sharding rules must
+    replicate instead of naming an absent axis (regression: axis_size used
+    to KeyError, then a too-permissive fallback emitted P(..., 'model') and
+    NamedSharding construction raised)."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.parallel import sharding as shd
+        mesh = jax.make_mesh((4,), ("data",))
+        tree = dict(
+            embed=jax.ShapeDtypeStruct((4096, 512), jnp.float32),
+            blocks=dict(w=jax.ShapeDtypeStruct((8, 1024, 512), jnp.float32)),
+            norm=dict(scale=jax.ShapeDtypeStruct((64,), jnp.float32)),
+        )
+        sh = shd.params_shardings(tree, mesh)           # must not raise
+        specs = [str(s.spec) for s in jax.tree_util.tree_leaves(sh)]
+        assert not any("model" in s for s in specs), specs
+        rep = shd.replicated_shardings(tree, mesh)
+        assert all(s.spec == P() for s in jax.tree_util.tree_leaves(rep))
+        f = shd.input_sharding_factory(mesh)
+        s = f((8, 128), ("batch", "heads"))             # no 'model' axis
+        # degenerate model axis (size 1): the last-dim FSDP fallback must
+        # still shard instead of silently replicating (regression)
+        mesh2 = jax.make_mesh((4, 1), ("data", "model"))
+        spec2 = shd.param_spec("blocks/w", (1023, 512), mesh2)
+        assert spec2 == P(None, "data"), spec2
+        print("REDUCED_OK", s.spec)
+    """, devices=4)
+    assert "REDUCED_OK" in out
+
+
 def test_input_sharding_factory_rules():
     out = run_sub("""
         import jax, jax.numpy as jnp

@@ -1,0 +1,161 @@
+"""Property tests for ``core.quant`` (via tests/_hypothesis_compat.py).
+
+Pinned properties:
+  * requantize/shift round-trips: lifting an int to a finer accumulator
+    domain and requantizing back is the identity;
+  * the integer rounding shift equals ``floor(x * 2^shift + 0.5)`` — i.e.
+    ties round toward +infinity — including at negative values and exactly
+    at shift boundaries (the FPGA ``(acc + half) >> s`` idiom; the Pallas
+    kernels, the lax-int backend, and the oracles all share this exact
+    semantics through ``requantize_shift``/``shift_align``);
+  * the int32 accumulator can never overflow for worst-case int8 inputs at
+    the paper's layer shapes (eq. 4/5 sizing), checked both analytically
+    and against an int64 reference convolution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import dataflow
+from repro.core import quant as Q
+from repro.core.quant import QSpec
+
+
+# ---------------------------------------------------------------------------
+# requantize round-trip
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(-128, 127), st.integers(-10, 0), st.integers(0, 12))
+@settings(max_examples=80, deadline=None)
+def test_requantize_roundtrip_through_finer_domain(v, to_exp, k):
+    """int in a spec domain -> lifted k bits into a finer (accumulator)
+    domain -> requantized back == the original int, for every signed int8
+    value, output exponent, and lift amount."""
+    spec = QSpec(8, True, to_exp)
+    acc = jnp.asarray([v], jnp.int32) << k          # value * 2^-k finer grid
+    back = Q.requantize_shift(acc, spec.exp - k, spec)
+    assert int(back[0]) == v
+
+
+@given(st.integers(-(2 ** 20), 2 ** 20), st.integers(0, 10))
+@settings(max_examples=100, deadline=None)
+def test_shift_align_left_then_right_is_identity(v, s):
+    """shift_align by +s then -s returns the original accumulator (the left
+    shift is exact; the rounding right shift of an exact multiple has no
+    remainder to round)."""
+    acc = jnp.asarray([v], jnp.int32)
+    up = Q.shift_align(acc, s)
+    down = Q.shift_align(up, -s)
+    assert int(down[0]) == v
+
+
+# ---------------------------------------------------------------------------
+# rounding semantics: ties toward +infinity, negatives included
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(-(2 ** 24), 2 ** 24), st.integers(1, 16))
+@settings(max_examples=150, deadline=None)
+def test_rounding_shift_equals_floor_half_up_float_reference(acc, s):
+    """(acc + half) >> s  ==  floor(acc * 2^-s + 0.5) for any sign — the
+    shared integer rounding of the whole pipeline."""
+    got = Q.shift_align(jnp.asarray([acc], jnp.int32), -s)
+    ref = int(np.floor(acc * 2.0 ** (-s) + 0.5))
+    assert int(got[0]) == ref
+
+
+@given(st.integers(-500, 500), st.integers(1, 12))
+@settings(max_examples=100, deadline=None)
+def test_rounding_at_exact_shift_boundary_ties_go_up(m, s):
+    """Exactly-half inputs (odd multiples of 2^(s-1)) round toward
+    +infinity: +0.5 -> 1 and -0.5 -> 0.  This is floor(x+0.5) — NOT
+    round-half-away-from-zero — and it is what the hardware idiom
+    ``(acc + half) >> s`` implements for negative accumulators too."""
+    acc = (2 * m + 1) * (1 << (s - 1))              # value/2^s == m + 0.5
+    got = int(Q.shift_align(jnp.asarray([acc], jnp.int32), -s)[0])
+    assert got == m + 1                              # ties toward +inf
+
+
+def test_rounding_negative_tie_examples_are_pinned():
+    """Concrete negative-tie cases (regression anchors for the property):
+    -0.5 -> 0, -1.5 -> -1, -2.5 -> -2 under a 1-bit rounding shift."""
+    acc = jnp.asarray([-1, -3, -5, 1, 3, 5], jnp.int32)
+    got = np.asarray(Q.shift_align(acc, -1))
+    np.testing.assert_array_equal(got, [0, -1, -2, 1, 2, 3])
+
+
+@given(st.integers(-(2 ** 20), 2 ** 20), st.integers(-12, -1),
+       st.integers(-10, -1))
+@settings(max_examples=100, deadline=None)
+def test_requantize_shift_matches_float_reference_with_clipping(
+        acc, acc_exp_off, out_exp):
+    """requantize_shift == clip(floor(acc * 2^(from-to) + 0.5)) for signed
+    and unsigned targets (the generalization of the example-based test in
+    test_quant.py)."""
+    from_exp = out_exp + acc_exp_off                 # strictly finer domain
+    for signed in (True, False):
+        spec = QSpec(8, signed, out_exp)
+        got = int(Q.requantize_shift(jnp.asarray([acc], jnp.int32),
+                                     from_exp, spec)[0])
+        ref = int(np.clip(np.floor(acc * 2.0 ** (from_exp - out_exp) + 0.5),
+                          spec.qmin, spec.qmax))
+        assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# int32 accumulator headroom at paper layer shapes (eq. 4/5)
+# ---------------------------------------------------------------------------
+
+
+def test_paper_layer_accumulators_fit_int32_analytically():
+    """eq. (5): worst-case |acc| = n_acc * |w|max * |x|max + |bias|max must
+    stay inside int32 for every conv of ResNet8 and ResNet20."""
+    for layers in (dataflow.resnet8_layers(), dataflow.resnet20_layers()):
+        for l in layers:
+            n_acc = l.ich * l.fh * l.fw              # per-output-value count
+            worst = n_acc * 128 * 255 + 2 ** 15      # s8 x u8 products + b16
+            assert worst < 2 ** 31, l.name
+            # the paper's own (upper-bound) sizing also fits
+            assert Q.acc_bits(n_acc) <= 32, l.name
+
+
+@given(st.sampled_from([(3, 16), (16, 16), (16, 32), (32, 32),
+                        (32, 64), (64, 64)]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_worst_case_int8_conv_accumulates_exactly_in_int32(chans, seed):
+    """A 3x3 conv at paper channel widths with adversarial extreme inputs
+    (activations 255, weights ±128 in sign patterns drawn per example):
+    the int32 accumulation equals an int64 reference bit for bit — no
+    silent wraparound anywhere in the pipeline's product domain."""
+    ich, och = chans
+    k = jax.random.PRNGKey(seed % (2 ** 31))
+    x = jnp.full((1, 6, 6, ich), 255, jnp.int32)          # u8 max activation
+    signs = jax.random.bernoulli(k, shape=(3, 3, ich, och))
+    w = jnp.where(signs, 127, -128).astype(jnp.int32)     # extreme weights
+
+    acc32 = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+
+    # int64 im2col reference in numpy (jax int64 silently truncates to
+    # int32 without the x64 flag, which would make this test vacuous)
+    xp = np.pad(np.asarray(x, np.int64)[0], ((1, 1), (1, 1), (0, 0)))
+    wn = np.asarray(w, np.int64).reshape(9 * ich, och)
+    patches = np.stack([xp[i:i + 6, j:j + 6] for i in range(3)
+                        for j in range(3)], axis=2)        # (6,6,9,ich)
+    acc64 = patches.reshape(6, 6, 9 * ich) @ wn
+    np.testing.assert_array_equal(np.asarray(acc32, np.int64)[0], acc64)
+
+
+@given(st.floats(-8.0, 8.0), st.integers(-8, -2))
+@settings(max_examples=100, deadline=None)
+def test_quantize_dequantize_error_bounded_by_half_step(v, e):
+    """In-range values round-trip within half a quantization step (eq. 1)."""
+    spec = QSpec(8, True, e)
+    lim = spec.qmax * spec.scale
+    v = float(np.clip(v, -lim, lim))
+    rt = float(Q.dequantize(Q.quantize(jnp.asarray([v]), spec), spec)[0])
+    assert abs(rt - v) <= spec.scale / 2 + 1e-9
