@@ -29,6 +29,10 @@ machine (tests/test_bench_repro.py pins this).  Benchmarks:
   * e2e_sharded     — scale-out serving (``serve.ShardedResNetEngine``):
                       FPS vs replica count + queue-wait/compute latency
                       percentiles through the deadline coalescer
+  * accuracy        — the paper's accuracy story in miniature
+                      (``repro.quantize``): float-train ResNet8 briefly on
+                      the synthetic task, PTQ-calibrate, export, top-1 of
+                      float vs int8 through the serving engine
   * kernels_micro   — per-kernel wall time (interpret mode on CPU; TPU is
                       the target, numbers are correctness-path timings)
   * roofline        — reads results/dryrun/*.json (launch.dryrun) and prints
@@ -328,6 +332,64 @@ def e2e_sharded():
                  inputs=input_digest(imgs))
 
 
+def accuracy():
+    """The accuracy half of the reproduction (``repro.quantize``): a short
+    seeded float train of ResNet8 on the synthetic task, PTQ calibration to
+    per-tensor pow2 grids, export to typed integer params (gated bit-exact
+    pallas vs lax-int), then top-1 of the float reference vs the served int8
+    model on the held-out synthetic eval set.  The top-1 values are
+    deterministic per (code, seed) and so part of the run digest; only the
+    wall-clock-derived fps is volatile."""
+    print("\n## accuracy — float vs PTQ-int8 top-1 through the serving "
+          "engine")
+    print("name,us_per_call,derived")
+    import dataclasses as dc
+
+    from repro.data.synthetic import SyntheticCifar
+    from repro.models import resnet as R
+    from repro.quantize import (
+        calibration_batches, evaluate_compiled, evaluate_float, ptq_quantize,
+        synthetic_eval_set, validate_export)
+    from repro.train import optimizer as opt_lib
+
+    cfg = dc.replace(R.RESNET8, quant="none")
+    steps, batch, eval_n = 40, 64, 256
+    params = R.init_params(cfg, key(60))
+    opt = opt_lib.sgdm(lr=0.1, total_steps=steps, warmup=4)
+    opt_state = opt.init(params)
+    pipe = SyntheticCifar(batch, seed=SEED)
+
+    @jax.jit
+    def step(p, s, i, b):
+        (_, m), g = jax.value_and_grad(
+            lambda pp: R.loss_fn(pp, cfg, b), has_aux=True)(p)
+        return (*opt.update(g, s, p, i), m)
+
+    t0 = time.perf_counter()
+    for i in range(steps):
+        params, opt_state, _ = step(params, opt_state, i, pipe.next())
+    jax.block_until_ready(params)
+
+    calib_batches = calibration_batches(2, batch, SEED)
+    params, _, qp = ptq_quantize(cfg, params, calib_batches)
+    check = validate_export(cfg, qp, calib_batches[0]["images"][:2])
+
+    images, labels = synthetic_eval_set(eval_n, seed=SEED)
+    fl = evaluate_float(cfg, params, images, labels)
+    res = evaluate_compiled(cfg, qp, images, labels, backend="lax-int",
+                            batch=64)
+    us = (time.perf_counter() - t0) * 1e6
+    emit(f"accuracy/{cfg.name}", us,
+         float_top1=round(fl["top1"], 4),
+         int8_top1=round(res["top1"], 4),
+         top1_gap=round(fl["top1"] - res["top1"], 4),
+         bit_exact=check["bit_exact"],
+         retraces=res["retraces"],
+         train_steps=steps, eval_n=eval_n,
+         fps=round(res["fps"], 1),
+         inputs=input_digest(images))
+
+
 def kernels_micro():
     print("\n## kernels_micro — interpret-mode timings (TPU is the target)")
     print("name,us_per_call,derived")
@@ -397,7 +459,8 @@ def main(argv=None) -> None:
     benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
                    fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
                    e2e_tuned=e2e_tuned, e2e_sharded=e2e_sharded,
-                   kernels_micro=kernels_micro, roofline=roofline)
+                   accuracy=accuracy, kernels_micro=kernels_micro,
+                   roofline=roofline)
     names = args.only.split(",") if args.only else list(benches)
     unknown = [n for n in names if n not in benches]
     if unknown:

@@ -33,11 +33,14 @@ import jax.numpy as jnp
 
 from repro.core import quant as Q
 from repro.compile import lowering
-from repro.compile.params import QConvParams, QResNetParams
+from repro.compile.params import (
+    QConvParams, QResNetParams, activation_out_specs)
 
-# activation/input grids are model-level constants (models.resnet defines the
-# network); import the values, not the module, to keep the dependency thin
-from repro.models.resnet import A_SPEC, X_SPEC
+# the default activation grid is a model-level constant (models.resnet
+# defines the network); import the value, not the module, to keep the
+# dependency thin.  Per-tensor grids (repro.quantize calibration) override it
+# through the specs the params carry — see activation_out_specs.
+from repro.models.resnet import A_SPEC
 
 
 @runtime_checkable
@@ -97,10 +100,10 @@ def _relu_requant(acc, c: QConvParams, out_spec=A_SPEC):
     return Q.requantize_shift(jnp.maximum(acc, 0), c.product_exp, out_spec)
 
 
-def _float_head(h_u8, fc):
+def _float_head(h_u8, fc, in_spec=A_SPEC):
     """Dequantize the final feature map and run pool + classifier in float —
     identical across integer backends (the paper's host-side tail)."""
-    pooled = jnp.mean(Q.dequantize(h_u8, A_SPEC), axis=(1, 2))
+    pooled = jnp.mean(Q.dequantize(h_u8, in_spec), axis=(1, 2))
     return pooled @ Q.dequantize(fc.wq, fc.w_spec) + fc.b
 
 
@@ -116,23 +119,28 @@ class LaxIntBackend:
 
     def lower(self, g, cfg, params: QResNetParams) -> Callable:
         plan = lowering.plan_model(g, params)
+        stem_out, block_outs = activation_out_specs(params, A_SPEC)
 
         def forward(images):
-            xq = Q.quantize(images, X_SPEC)
-            h = _relu_requant(_int_conv(xq, params.stem), params.stem)
+            xq = Q.quantize(images, params.stem.x_spec)
+            h = _relu_requant(_int_conv(xq, params.stem), params.stem,
+                              stem_out)
             for task in plan.blocks:
                 blk = params.blocks[task.index]
+                out_spec = block_outs[task.index]
                 y = _relu_requant(_int_conv(h, blk.conv0, task.stride),
-                                  blk.conv0)
-                sh = blk.shifts(A_SPEC.exp)["skip_shift"]
+                                  blk.conv0, blk.conv1.x_spec)
+                sh = blk.shifts_for(out_spec.exp)["skip_shift"]
                 if task.has_ds:
                     skip_q = Q.shift_align(
                         _int_conv(h, blk.ds, task.stride), sh)
                 else:
                     skip_q = Q.shift_align(h, sh)
                 h = _relu_requant(
-                    _int_conv(y, blk.conv1, 1, acc_init=skip_q), blk.conv1)
-            return _float_head(h, params.fc)
+                    _int_conv(y, blk.conv1, 1, acc_init=skip_q), blk.conv1,
+                    out_spec)
+            return _float_head(h, params.fc,
+                               block_outs[-1] if block_outs else stem_out)
 
         return forward
 
@@ -150,16 +158,17 @@ class PallasBackend:
         from repro.kernels.resblock_fused.ops import resblock_fused_op
 
         plan = lowering.plan_model(g, params)
+        stem_out, block_outs = activation_out_specs(params, A_SPEC)
 
         def forward(images):
-            xq = Q.quantize(images, X_SPEC)
+            xq = Q.quantize(images, params.stem.x_spec)
             st = params.stem
             h = conv_stem_op(xq, st.wq, st.bq,
-                             shift=A_SPEC.exp - st.product_exp,
+                             shift=stem_out.exp - st.product_exp,
                              config=plan.stem.config)
             for task in plan.blocks:
                 blk = params.blocks[task.index]
-                sh = blk.shifts(A_SPEC.exp)
+                sh = blk.shifts_for(block_outs[task.index].exp)
                 wd = bd = None
                 if task.has_ds:
                     wd = blk.ds.wq
@@ -168,7 +177,8 @@ class PallasBackend:
                     h, blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
                     blk.conv1.wq, blk.conv1.bq.astype(jnp.int32),
                     wd, bd, stride=task.stride, config=task.config, **sh)
-            return _float_head(h, params.fc)
+            return _float_head(h, params.fc,
+                               block_outs[-1] if block_outs else stem_out)
 
         return forward
 
@@ -183,6 +193,7 @@ class FloatBackend:
 
     def lower(self, g, cfg, params: QResNetParams) -> Callable:
         plan = lowering.plan_model(g, params)
+        stem_out, block_outs = activation_out_specs(params, A_SPEC)
 
         def fconv(h, c: QConvParams, stride=1):
             wf = Q.dequantize(c.wq, c.w_spec)
@@ -196,18 +207,19 @@ class FloatBackend:
             return Q.dequantize(Q.quantize(x, spec), spec)
 
         def forward(images):
-            h = fq(images, X_SPEC)
-            h = fq(jax.nn.relu(fconv(h, params.stem)), A_SPEC)
+            h = fq(images, params.stem.x_spec)
+            h = fq(jax.nn.relu(fconv(h, params.stem)), stem_out)
             for task in plan.blocks:
                 blk = params.blocks[task.index]
-                y = fq(jax.nn.relu(fconv(h, blk.conv0, task.stride)), A_SPEC)
+                y = fq(jax.nn.relu(fconv(h, blk.conv0, task.stride)),
+                       blk.conv1.x_spec)
                 grid = Q.QSpec(32, True, blk.conv1.product_exp)
                 if task.has_ds:
                     skip = fq(fconv(h, blk.ds, task.stride), grid)
                 else:
                     skip = fq(h, grid)
                 z = fconv(y, blk.conv1, 1) + skip
-                h = fq(jax.nn.relu(z), A_SPEC)
+                h = fq(jax.nn.relu(z), block_outs[task.index])
             pooled = jnp.mean(h, axis=(1, 2))
             return pooled @ Q.dequantize(params.fc.wq, params.fc.w_spec) \
                 + params.fc.b

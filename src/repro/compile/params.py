@@ -68,14 +68,21 @@ class QConvParams:
 @dataclasses.dataclass(frozen=True)
 class QLinearParams:
     """The classifier head: int8 weights, float bias (the tail runs in float,
-    identical to the paper's host-side final layer)."""
+    identical to the paper's host-side final layer).
+
+    ``x_spec`` is the activation grid of the head's *input* feature map (the
+    last residual block's output).  ``None`` means the model-level default
+    grid (``models.resnet.A_SPEC``) — the legacy fixed-grid layout.  The
+    ``repro.quantize`` calibration pipeline sets it per-model from observed
+    activation statistics."""
 
     wq: jnp.ndarray             # (din, dout) int8
     b: jnp.ndarray              # (dout,) float32
     w_spec: QSpec
+    x_spec: Optional[QSpec] = None
 
     def tree_flatten(self):
-        return (self.wq, self.b), (self.w_spec,)
+        return (self.wq, self.b), (self.w_spec, self.x_spec)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -83,10 +90,14 @@ class QLinearParams:
 
     @classmethod
     def from_dict(cls, d: dict) -> "QLinearParams":
-        return cls(wq=d["wq"], b=d["b"], w_spec=d["w_spec"])
+        return cls(wq=d["wq"], b=d["b"], w_spec=d["w_spec"],
+                   x_spec=d.get("x_spec"))
 
     def to_dict(self) -> dict:
-        return dict(wq=self.wq, b=self.b, w_spec=self.w_spec)
+        out = dict(wq=self.wq, b=self.b, w_spec=self.w_spec)
+        if self.x_spec is not None:
+            out["x_spec"] = self.x_spec
+        return out
 
 
 @jax.tree_util.register_pytree_node_class
@@ -104,17 +115,40 @@ class QBlockParams:
         return self.ds is not None
 
     def shifts(self, a_exp: int) -> dict:
-        """Static pow2 shifts for the fused kernels (``a_exp`` = the
-        activation-grid exponent, ``models.resnet.A_SPEC.exp``):
-        shift0/shift1 requantize each conv's product domain back to the
-        activation grid; skip_shift aligns the skip stream into conv1's
-        product domain (the add-fold accumulator init)."""
-        out = dict(shift0=a_exp - self.conv0.product_exp,
-                   shift1=a_exp - self.conv1.product_exp)
+        """Fixed-grid variant of :meth:`shifts_for` — every activation on
+        one global grid at exponent ``a_exp`` (the legacy
+        ``models.resnet.A_SPEC`` layout).  Refuses calibrated per-tensor
+        params: their conv input grids differ from ``a_exp`` and the fixed
+        formula would silently produce wrong requantization."""
+        for c in (self.conv0, self.conv1):
+            if c.x_spec.exp != a_exp:
+                raise ValueError(
+                    f"shifts({a_exp}) on per-tensor params (conv input grid "
+                    f"exp {c.x_spec.exp}); use shifts_for()")
+        return self.shifts_for(a_exp)
+
+    def shifts_for(self, out_exp: int) -> dict:
+        """Per-tensor generalization of :meth:`shifts`: every shift is derived
+        from the specs the params themselves carry rather than one global
+        activation exponent.  ``out_exp`` is the exponent of the *block
+        output* grid (= the next consumer's ``conv0.x_spec``, or the head's
+        input spec for the last block):
+
+          * shift0      — conv0's product domain -> conv1's input grid
+            (``conv1.x_spec``), since conv1 consumes conv0's output;
+          * shift1      — conv1's product domain -> the block output grid;
+          * skip_shift  — the skip stream's domain (ds product domain, or the
+            block *input* grid ``conv0.x_spec`` when there is no downsample)
+            -> conv1's product domain (the add-fold accumulator init).
+
+        With the legacy fixed-grid params (every activation on ``A_SPEC``)
+        this equals ``shifts(A_SPEC.exp)`` exactly."""
+        out = dict(shift0=self.conv1.x_spec.exp - self.conv0.product_exp,
+                   shift1=out_exp - self.conv1.product_exp)
         if self.ds is not None:
             out["skip_shift"] = self.ds.product_exp - self.conv1.product_exp
         else:
-            out["skip_shift"] = a_exp - self.conv1.product_exp
+            out["skip_shift"] = self.conv0.x_spec.exp - self.conv1.product_exp
         return out
 
     def tree_flatten(self):
@@ -169,6 +203,27 @@ class QResNetParams:
         return dict(stem=self.stem.to_dict(),
                     blocks=[b.to_dict() for b in self.blocks],
                     fc=self.fc.to_dict())
+
+
+def activation_out_specs(params: QResNetParams, default: QSpec):
+    """Derive the *output* activation :class:`QSpec` of each task in graph
+    order from the specs the consumers carry — the single source of truth all
+    backends share for per-tensor activation grids:
+
+      * the stem's output grid is block 0's input grid (``conv0.x_spec``);
+      * block ``i``'s output grid is block ``i+1``'s input grid;
+      * the last block's output grid is the head's input spec
+        (``fc.x_spec``), falling back to ``default`` (the model-level
+        ``A_SPEC``) for legacy fixed-grid params.
+
+    Returns ``(stem_out, block_outs)`` with ``len(block_outs) ==
+    len(params.blocks)``.  With legacy params every entry equals ``default``.
+    """
+    head = params.fc.x_spec if params.fc.x_spec is not None else default
+    if not params.blocks:
+        return head, ()
+    block_outs = tuple(b.conv0.x_spec for b in params.blocks[1:]) + (head,)
+    return params.blocks[0].conv0.x_spec, block_outs
 
 
 def ensure_typed(qparams) -> QResNetParams:

@@ -138,6 +138,10 @@ def _ste_bwd(res, g):
 
 _ste_round_clip.defvjp(_ste_fwd, _ste_bwd)
 
+# public alias: QAT flows with data-dependent (stop-gradient) scales — e.g.
+# repro.quantize.qat's dynamic weight fake-quant — reuse the same STE kernel
+ste_round_clip = _ste_round_clip
+
 
 def fake_quant(x: jnp.ndarray, spec: QSpec) -> jnp.ndarray:
     """QAT fake quantization: float->float, STE gradient.

@@ -223,6 +223,42 @@ def fold_params(params) -> dict:
     return out
 
 
+def folded_float_forward(folded, cfg: ResNetConfig, images, tap=None):
+    """Float reference forward on BN-*folded* params — the graph the integer
+    pipeline quantizes, run in float32 with no quantization at all.
+
+    ``tap(site, tensor)`` (optional) is called at every activation site in
+    graph order; this is the attachment point for ``repro.quantize``'s
+    calibration observers.  Sites:
+
+      * ``"input"``          — the image batch;
+      * ``"stem.out"``       — post-ReLU stem output (= block 0's input);
+      * ``"block{i}.mid"``   — block i's conv0 output post-ReLU (conv1 input);
+      * ``"block{i}.out"``   — block i's output post-add post-ReLU.
+
+    Returns logits (B, num_classes)."""
+    def see(site, h):
+        if tap is not None:
+            tap(site, h)
+        return h
+
+    x = see("input", images)
+    h = see("stem.out", jax.nn.relu(
+        _conv(x, folded["stem"]["w"], folded["stem"]["b"])))
+    for i, (blk, stride) in enumerate(zip(folded["blocks"],
+                                          block_strides(cfg))):
+        y = see(f"block{i}.mid", jax.nn.relu(
+            _conv(h, blk["conv0"]["w"], blk["conv0"]["b"], stride)))
+        if "ds" in blk:
+            skip = _conv(h, blk["ds"]["w"], blk["ds"]["b"], stride)
+        else:
+            skip = h
+        z = _conv(y, blk["conv1"]["w"], blk["conv1"]["b"], 1) + skip
+        h = see(f"block{i}.out", jax.nn.relu(z))
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ folded["fc"]["w"] + folded["fc"]["b"]
+
+
 def quantize_params(folded, cfg: ResNetConfig) -> dict:
     """Float folded params -> integer weights/biases per the paper's spec:
     int8 weights (pow2 scale), int16 biases at s_b = s_x + s_w.

@@ -28,9 +28,17 @@ DEFAULT_CACHE = "~/.cache/repro/tune.json"
 
 
 def cache_path() -> str:
-    """Resolved cache file path (``REPRO_TUNE_CACHE`` wins)."""
-    return os.path.expanduser(os.environ.get("REPRO_TUNE_CACHE")
-                              or DEFAULT_CACHE)
+    """Resolved cache file path.  Precedence: ``REPRO_TUNE_CACHE`` (explicit
+    override), then ``$XDG_CACHE_HOME/repro/tune.json`` (the basedir spec —
+    CI runners and sandboxes point XDG_CACHE_HOME at writable scratch), then
+    ``~/.cache/repro/tune.json``."""
+    explicit = os.environ.get("REPRO_TUNE_CACHE")
+    if explicit:
+        return os.path.expanduser(explicit)
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    if xdg:
+        return os.path.join(os.path.expanduser(xdg), "repro", "tune.json")
+    return os.path.expanduser(DEFAULT_CACHE)
 
 
 def cache_key(kernel: str, shapes, dtype: str, backend: str,

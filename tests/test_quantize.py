@@ -1,0 +1,383 @@
+"""repro.quantize: observers, calibration determinism, STE gradients, export
+round-trip bit-exactness, the PTQ/QAT accuracy acceptance criteria, and the
+eval harness (synthetic fallback + real-data loader + serving-path eval)."""
+import dataclasses
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.data.synthetic import SyntheticCifar
+from repro.models import resnet as R
+from repro.quantize import (
+    CalibrationResult, MinMaxObserver, MovingAverageObserver,
+    PercentileObserver, QuantRecipe, calibrate, calibration_batches,
+    evaluate_compiled, evaluate_float, export_qparams, fake_quant_weight,
+    fine_tune, load_eval_set, make_observer, pow2_exponent, ptq_quantize,
+    qat_forward, synthetic_eval_set, validate_export)
+from repro.train import optimizer as opt_lib
+
+CFG8 = dataclasses.replace(R.RESNET8, quant="none")
+CFG20 = dataclasses.replace(R.RESNET20, quant="none")
+
+
+def _calib_batches(n=2, batch=32, seed=0):
+    return calibration_batches(n, batch, seed)
+
+
+def _ptq(cfg, params, batches=None, **kw):
+    """BN-calibrate + range-calibrate + export in one call.
+    Returns (params_bn, calib, qparams)."""
+    return ptq_quantize(cfg, params, batches or _calib_batches(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# observers
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_exponent_rule():
+    # amax 1.0 over u8: 1.0 <= 255 * 2^-7 (=1.99) but not 255 * 2^-8
+    assert pow2_exponent(1.0, 8, signed=False) == -7
+    # signed-8: qmax 127; amax 1.0 <= 127 * 2^-6 (=1.98)
+    assert pow2_exponent(1.0, 8, signed=True) == -6
+    # exact cover: amax == qmax * 2^s chooses s
+    assert pow2_exponent(127.0, 8, signed=True) == 0
+    # degenerate range never explodes
+    assert pow2_exponent(0.0, 8, signed=False) < -30
+
+
+def test_minmax_observer_tracks_global_max():
+    o = MinMaxObserver()
+    o.observe(np.array([0.1, -0.5]))
+    o.observe(np.array([3.0]))
+    o.observe(np.array([0.2]))
+    assert o.amax() == 3.0 and o.batches == 3
+    assert o.qspec(8, False).exp == pow2_exponent(3.0, 8, False)
+
+
+def test_ema_observer_damps_spikes():
+    o = MovingAverageObserver(momentum=0.9)
+    o.observe(np.full(4, 1.0))
+    for _ in range(3):
+        o.observe(np.full(4, 1.0))
+    o.observe(np.full(4, 100.0))          # one outlier batch
+    assert 1.0 < o.amax() < 20.0          # damped, not adopted wholesale
+    mm = MinMaxObserver()
+    mm.observe(np.full(4, 100.0))
+    assert mm.amax() == 100.0
+
+
+def test_percentile_observer_clips_tail():
+    x = np.concatenate([np.full(999, 1.0), np.full(1, 1000.0)])
+    p = PercentileObserver(percentile=99.0)
+    p.observe(x)
+    mm = MinMaxObserver()
+    mm.observe(x)
+    assert p.amax() < 2.0 < mm.amax()
+    # finer grid (smaller exponent) from clipping the outlier
+    assert p.exponent(8, False) < mm.exponent(8, False)
+
+
+def test_observer_factory_and_determinism():
+    with pytest.raises(ValueError):
+        make_observer("nope")
+    a, b = make_observer("percentile"), make_observer("percentile")
+    rng = np.random.default_rng(0)
+    batches = [rng.normal(size=256) for _ in range(5)]
+    for x in batches:
+        a.observe(x)
+        b.observe(x)
+    assert a.amax() == b.amax() and a.exponent() == b.exponent()
+
+
+# ---------------------------------------------------------------------------
+# calibration: determinism + serialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("observer", ["minmax", "ema", "percentile"])
+def test_calibration_deterministic(observer):
+    """Same data + same seed -> bitwise-identical scales and shifts."""
+    def one():
+        params = R.init_params(CFG8, jax.random.PRNGKey(3))
+        return calibrate(CFG8, params, _calib_batches(), observer=observer)
+
+    c1, c2 = one(), one()
+    assert c1.to_dict() == c2.to_dict()
+    # and the derived shifts are identical too
+    p = R.init_params(CFG8, jax.random.PRNGKey(3))
+    qp1 = export_qparams(CFG8, R.calibrate_bn(
+        p, CFG8, _calib_batches()[0]["images"]), c1)
+    qp2 = export_qparams(CFG8, R.calibrate_bn(
+        p, CFG8, _calib_batches()[0]["images"]), c2)
+    for b1, b2 in zip(qp1.blocks, qp2.blocks):
+        assert b1.shifts_for(0) == b2.shifts_for(0)
+
+
+def test_calibration_json_roundtrip():
+    params = R.init_params(CFG8, jax.random.PRNGKey(4))
+    c = calibrate(CFG8, params, _calib_batches())
+    rt = CalibrationResult.from_dict(c.to_dict())
+    assert rt == c
+    # sites cover the whole graph
+    n = 3 * CFG8.blocks_per_stage
+    assert set(c.acts) == {"stem.out"} | {
+        f"block{i}.{k}" for i in range(n) for k in ("mid", "out")}
+    assert set(c.w_exps) >= {"stem", "fc"}
+
+
+def test_calibrate_rejects_empty_and_wrong_model():
+    params = R.init_params(CFG8, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        calibrate(CFG8, params, [])
+    c = calibrate(CFG8, params, _calib_batches(1))
+    with pytest.raises(ValueError):
+        export_qparams(CFG20, R.init_params(CFG20, jax.random.PRNGKey(0)), c)
+
+
+# ---------------------------------------------------------------------------
+# STE gradients
+# ---------------------------------------------------------------------------
+
+
+def test_fake_quant_ste_identity_inside_clip_zero_outside():
+    spec = Q.QSpec(8, True, -4)
+    hi = spec.qmax * spec.scale           # top of the representable range
+    x = jnp.array([0.0, 0.3, -0.7, hi * 0.9, hi * 1.5, -hi * 2.0])
+    g = jax.grad(lambda v: jnp.sum(Q.fake_quant(v, spec)))(x)
+    np.testing.assert_array_equal(
+        np.asarray(g), np.array([1.0, 1.0, 1.0, 1.0, 0.0, 0.0]))
+
+
+def test_dynamic_weight_fake_quant_ste():
+    w = jnp.array([0.5, -0.25, 0.1, -0.9])
+    # forward: fake-quant == quantize->dequantize on the dynamic pow2 grid
+    e = pow2_exponent(0.9, 8, signed=True)
+    spec = Q.QSpec(8, True, e)
+    np.testing.assert_allclose(
+        np.asarray(fake_quant_weight(w)),
+        np.asarray(Q.dequantize(Q.quantize(w, spec), spec)))
+    # backward: the grid max is inside the clip range by construction, so
+    # the gradient is identity everywhere (scale is stop-gradient)
+    g = jax.grad(lambda v: jnp.sum(fake_quant_weight(v)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(4))
+
+
+def test_qat_forward_runs_and_differs_from_float():
+    params = R.init_params(CFG8, jax.random.PRNGKey(5))
+    recipe = QuantRecipe.static_default(CFG8)
+    x = jnp.asarray(_calib_batches(1)[0]["images"][:2])
+    lq = qat_forward(params, CFG8, recipe, x)
+    lf = R.forward(params, CFG8, x)       # quant="none": pure float
+    assert lq.shape == lf.shape == (2, 10)
+    assert np.isfinite(np.asarray(lq)).all()
+    assert not np.allclose(np.asarray(lq), np.asarray(lf))
+
+
+# ---------------------------------------------------------------------------
+# export: round-trip + cross-backend bit-exactness + serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [CFG8, CFG20], ids=["resnet8", "resnet20"])
+def test_export_bitexact_across_backends(cfg):
+    params = R.init_params(cfg, jax.random.PRNGKey(6))
+    _, calib, qp = _ptq(cfg, params)
+    imgs = _calib_batches(1)[0]["images"][:2]
+    check = validate_export(cfg, qp, imgs)
+    assert check["bit_exact"] and check["max_abs_dev"] == 0.0
+
+
+def test_export_dict_roundtrip_bit_identical():
+    from repro.compile.params import QResNetParams
+
+    params = R.init_params(CFG8, jax.random.PRNGKey(7))
+    _, calib, qp = _ptq(CFG8, params)
+    rt = QResNetParams.from_dict(qp.to_dict())
+    for a, b in zip(jax.tree_util.tree_leaves(qp),
+                    jax.tree_util.tree_leaves(rt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # specs survive the round trip too (aux data, not leaves)
+    assert rt.fc.x_spec == qp.fc.x_spec
+    assert rt.blocks[0].conv0.x_spec == qp.blocks[0].conv0.x_spec
+
+
+def test_exported_specs_follow_calibration():
+    params = R.init_params(CFG8, jax.random.PRNGKey(8))
+    _, calib, qp = _ptq(CFG8, params)
+    assert qp.stem.x_spec == calib.x_spec
+    n = len(qp.blocks)
+    for i, blk in enumerate(qp.blocks):
+        assert blk.conv0.x_spec == calib.block_in(i)
+        assert blk.conv1.x_spec == calib.block_mid(i)
+        if blk.ds is not None:
+            assert blk.ds.x_spec == calib.block_in(i)
+        # paper: s_b = s_x + s_w, int16
+        for c in (blk.conv0, blk.conv1) + ((blk.ds,) if blk.ds else ()):
+            assert c.b_spec.exp == c.x_spec.exp + c.w_spec.exp
+            assert c.b_spec.bits == 16
+    assert qp.fc.x_spec == calib.head_in(n)
+
+
+def test_varied_per_tensor_grids_stay_bitexact():
+    """Per-tensor activation exponents that differ site-to-site (the whole
+    point of calibration) still lower bit-exactly through pallas vs lax-int
+    — positive, zero and negative requant/skip shifts all realized."""
+    params = R.init_params(CFG8, jax.random.PRNGKey(9))
+    batches = _calib_batches()
+    params = R.calibrate_bn(
+        params, CFG8, np.concatenate([b["images"] for b in batches]))
+    calib = calibrate(CFG8, params, batches, calibrate_bn=False)
+    spread = {site: Q.QSpec(8, False, s.exp + (i % 3) - 1)
+              for i, (site, s) in enumerate(sorted(calib.acts.items()))}
+    calib = dataclasses.replace(calib, acts=spread)
+    qp = export_qparams(CFG8, params, calib)
+    imgs = batches[0]["images"][:2]
+    assert validate_export(CFG8, qp, imgs)["bit_exact"]
+
+
+def test_exported_params_serve_with_zero_retracing():
+    from repro.serve.engine import ImageRequest, ResNetEngine
+
+    params = R.init_params(CFG8, jax.random.PRNGKey(10))
+    _, _, qp = _ptq(CFG8, params)
+    eng = ResNetEngine(CFG8, qp, batch=4, backend="lax-int")
+    rng = np.random.default_rng(0)
+    imgs = rng.random((12, 32, 32, 3)).astype(np.float32)
+    reqs = [ImageRequest(rid=i, image=imgs[i]) for i in range(12)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert max(eng.model.trace_counts.values()) == 1
+    # engine labels == direct compiled-model argmax
+    direct = np.argmax(np.asarray(eng.model(imgs)), -1)
+    np.testing.assert_array_equal([r.label for r in reqs], direct)
+
+
+# ---------------------------------------------------------------------------
+# accuracy acceptance: PTQ within 2% of float, QAT recovers half the gap
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained8():
+    """ResNet8 float-trained on the synthetic task until it generalizes."""
+    steps, batch = 40, 64
+    params = R.init_params(CFG8, jax.random.PRNGKey(0))
+    opt = opt_lib.sgdm(lr=0.1, total_steps=steps, warmup=4)
+    opt_state = opt.init(params)
+    pipe = SyntheticCifar(batch, seed=0)
+
+    @jax.jit
+    def step(p, s, i, b):
+        (_, m), g = jax.value_and_grad(
+            lambda pp: R.loss_fn(pp, CFG8, b), has_aux=True)(p)
+        return (*opt.update(g, s, p, i), m)
+
+    for i in range(steps):
+        params, opt_state, _ = step(params, opt_state, i, pipe.next())
+    return jax.block_until_ready(params), pipe
+
+
+def test_ptq_within_2pct_and_qat_recovers_half(trained8):
+    params, pipe = trained8
+    images, labels = synthetic_eval_set(256, seed=0)
+    params_bn, calib, qp = _ptq(CFG8, params, _calib_batches(2, 64, 0))
+    fl = evaluate_float(CFG8, params_bn, images, labels)
+    ptq = evaluate_compiled(CFG8, qp, images, labels, backend="lax-int",
+                            batch=64)
+    assert fl["top1"] > 0.5, "float model failed to learn the synthetic task"
+    gap = fl["top1"] - ptq["top1"]
+    assert gap <= 0.02, (
+        f"PTQ int8 top-1 {ptq['top1']:.4f} is more than 2% below the float "
+        f"reference {fl['top1']:.4f}")
+    assert ptq["retraces"] == 1
+
+    # QAT: fine-tune under fake-quant noise, re-calibrate, re-export
+    recipe = QuantRecipe.from_calibration(calib, CFG8)
+    params_q, metrics = fine_tune(CFG8, params_bn, recipe, pipe, steps=12,
+                                  lr=0.005, log=lambda *_: None)
+    assert metrics and np.isfinite(float(metrics["loss"]))
+    _, _, qp_q = _ptq(CFG8, params_q, _calib_batches(2, 64, 0))
+    qat = evaluate_compiled(CFG8, qp_q, images, labels, backend="lax-int",
+                            batch=64)
+    # recovers at least half of any remaining PTQ gap (trivially satisfied
+    # when PTQ already matches float)
+    assert qat["top1"] >= fl["top1"] - max(gap, 0.0) / 2 - 1e-9, (
+        f"QAT top-1 {qat['top1']:.4f} recovers less than half of the PTQ "
+        f"gap (float {fl['top1']:.4f}, PTQ {ptq['top1']:.4f})")
+
+
+# ---------------------------------------------------------------------------
+# eval harness
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_eval_set_deterministic_and_heldout():
+    a_imgs, a_lbls = synthetic_eval_set(64, seed=0)
+    b_imgs, b_lbls = synthetic_eval_set(64, seed=0)
+    np.testing.assert_array_equal(a_imgs, b_imgs)
+    np.testing.assert_array_equal(a_lbls, b_lbls)
+    assert a_imgs.shape == (64, 32, 32, 3) and a_imgs.dtype == np.float32
+    assert 0.0 <= a_imgs.min() and a_imgs.max() < 1.0
+    # held-out: different draws than the training pipeline's early steps
+    train_imgs = SyntheticCifar(64, seed=0).next()["images"]
+    assert not np.array_equal(a_imgs, train_imgs)
+
+
+def test_load_eval_set_synthetic_fallback(monkeypatch):
+    monkeypatch.delenv("REPRO_DATA_DIR", raising=False)
+    imgs, labels, source = load_eval_set(32)
+    assert source == "synthetic" and len(imgs) == len(labels) == 32
+
+
+def test_load_eval_set_real_cifar(tmp_path, monkeypatch):
+    # a miniature test_batch in the canonical python-version pickle layout
+    d = tmp_path / "cifar-10-batches-py"
+    d.mkdir()
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 256, (8, 3072), dtype=np.int64).astype(np.uint8)
+    with open(d / "test_batch", "wb") as f:
+        pickle.dump({b"data": raw, b"labels": list(range(8))}, f)
+    monkeypatch.setenv("REPRO_DATA_DIR", str(tmp_path))
+    imgs, labels, source = load_eval_set(4)
+    assert source == "cifar10" and imgs.shape == (4, 32, 32, 3)
+    assert imgs.max() < 1.0
+    np.testing.assert_array_equal(labels, [0, 1, 2, 3])
+    # channel layout: data is R[1024]G[1024]B[1024] row-major 32x32
+    np.testing.assert_allclose(imgs[0, 0, 0, 0], raw[0, 0] / 256.0)
+    np.testing.assert_allclose(imgs[0, 0, 0, 2], raw[0, 2048] / 256.0)
+
+
+def test_evaluate_compiled_sharded_matches_single():
+    params = R.init_params(CFG8, jax.random.PRNGKey(11))
+    _, _, qp = _ptq(CFG8, params)
+    images, labels = synthetic_eval_set(24, seed=0)
+    single = evaluate_compiled(CFG8, qp, images, labels, backend="lax-int",
+                               batch=8)
+    sharded = evaluate_compiled(CFG8, qp, images, labels, backend="lax-int",
+                                batch=8, replicas=1)
+    assert single["top1"] == sharded["top1"]
+    assert sharded["replicas"] == 1 and single["replicas"] == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_calibrate_smoke(tmp_path, capsys):
+    from repro.quantize.__main__ import main
+
+    out = main(["calibrate", "--arch", "resnet8", "--float-steps", "0",
+                "--batch", "16", "--calib-batches", "1",
+                "--json", str(tmp_path / "q.json")])
+    assert out["export"]["bit_exact"]
+    assert (tmp_path / "q.json").is_file()
+    assert "calibration[resnet8]" in capsys.readouterr().out

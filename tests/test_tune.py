@@ -91,7 +91,23 @@ def test_cache_corrupt_file_treated_as_empty(tmp_path, monkeypatch):
 
 def test_cache_default_path_used_without_env(monkeypatch):
     monkeypatch.delenv("REPRO_TUNE_CACHE", raising=False)
+    monkeypatch.delenv("XDG_CACHE_HOME", raising=False)
     assert T.cache_path() == os.path.expanduser("~/.cache/repro/tune.json")
+
+
+def test_cache_path_honors_xdg_cache_home(tmp_path, monkeypatch):
+    monkeypatch.delenv("REPRO_TUNE_CACHE", raising=False)
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    assert T.cache_path() == str(tmp_path / "xdg" / "repro" / "tune.json")
+    # REPRO_TUNE_CACHE still wins over XDG
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "explicit.json"))
+    assert T.cache_path() == str(tmp_path / "explicit.json")
+    # save() creates the missing XDG parent directories
+    monkeypatch.delenv("REPRO_TUNE_CACHE", raising=False)
+    c = T.TuneCache()
+    c.put("k", {"stem": KernelConfig()})
+    c.save()
+    assert os.path.isfile(tmp_path / "xdg" / "repro" / "tune.json")
 
 
 # ---------------------------------------------------------------------------
