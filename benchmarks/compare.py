@@ -1,0 +1,144 @@
+"""Diff two ``benchmarks/run.py --json`` snapshots and fail on regression.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_0006.json new.json \
+        --fps-drop 0.2 --latency-rise 0.5
+
+This is the enforcement half of the committed perf trajectory (ROADMAP
+item 3): a ``BENCH_*.json`` snapshot is committed per PR and CI re-runs the
+same seeded rows, so "measurably faster" regressions fail loudly instead of
+accumulating silently.  Three classes of check, strictest first:
+
+  1. **Correctness flags** — any boolean derived value (``bit_exact``,
+     ``exact``…) that was true in the baseline must stay true.  Machine
+     independent: zero tolerance.
+  2. **Deterministic science** — non-:data:`~benchmarks.run.VOLATILE`
+     derived values (modeled HBM bytes, chain partitions, input digests,
+     top-1 accuracies) are pure functions of (code, seed); any drift is a
+     real behaviour change and fails unless ``--no-strict-derived``.
+  3. **Wall-clock** — FPS-like keys must not drop by more than
+     ``--fps-drop`` and latency-like values (``us_per_call``) must not rise
+     by more than ``--latency-rise``, both *relative* thresholds so the gate
+     is noise-tolerant.  Comparing snapshots from different machines needs
+     generous thresholds (CI uses wide ones); same-machine runs can use the
+     tight defaults.
+
+Rows present in the baseline must exist in the new run (a silently dropped
+benchmark is a regression of coverage).  New rows are ignored — adding
+benchmarks never breaks the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.run import VOLATILE, run_digest  # noqa: E402
+
+# wall-clock derived keys where HIGHER is better (checked via --fps-drop);
+# every other volatile numeric is treated as informational noise.
+FPS_KEYS = frozenset({"fps", "default_fps", "int_graph_fps"})
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        snap = json.load(f)
+    if not isinstance(snap, dict) or "rows" not in snap:
+        raise ValueError(f"{path}: not a benchmarks/run.py --json snapshot")
+    return snap
+
+
+def verify_digest(snap: dict, path: str = "<snapshot>"):
+    """Recompute the snapshot's digest from its rows — a loaded file must be
+    self-consistent (guards hand-edited baselines)."""
+    got = run_digest(snap["rows"])
+    want = snap.get("digest")
+    if want is not None and got != want:
+        raise ValueError(
+            f"{path}: stored digest {want[:12]} != recomputed {got[:12]} — "
+            f"the snapshot was edited after it was written")
+
+
+def compare_runs(base: dict, new: dict, fps_drop: float = 0.2,
+                 latency_rise: float = 0.5,
+                 strict_derived: bool = True) -> list:
+    """Return the list of regressions (dicts with row/kind/detail) of ``new``
+    vs ``base``; empty means the gate is green."""
+    regressions = []
+
+    def flag(row, kind, detail):
+        regressions.append(dict(row=row, kind=kind, detail=detail))
+
+    new_rows = {r["name"]: r for r in new["rows"]}
+    for b in base["rows"]:
+        name = b["name"]
+        n = new_rows.get(name)
+        if n is None:
+            flag(name, "missing-row", "present in baseline, absent in new run")
+            continue
+        bd, nd = b["derived"], n["derived"]
+        for k, bv in bd.items():
+            if k not in nd:
+                flag(name, "missing-key", f"derived[{k!r}] disappeared")
+                continue
+            nv = nd[k]
+            if isinstance(bv, bool):
+                if bv and not nv:
+                    flag(name, "correctness", f"{k}: true -> {nv}")
+            elif k in FPS_KEYS and isinstance(bv, (int, float)) and bv > 0:
+                if nv < bv * (1.0 - fps_drop):
+                    flag(name, "fps",
+                         f"{k}: {bv:g} -> {nv:g} "
+                         f"({nv / bv - 1:+.1%} < -{fps_drop:.0%})")
+            elif k not in VOLATILE and strict_derived and nv != bv:
+                flag(name, "derived-drift", f"{k}: {bv!r} -> {nv!r}")
+        bus, nus = b.get("us_per_call", 0), n.get("us_per_call", 0)
+        if bus and bus > 0 and nus > bus * (1.0 + latency_rise):
+            flag(name, "latency",
+                 f"us_per_call: {bus:g} -> {nus:g} "
+                 f"({nus / bus - 1:+.1%} > +{latency_rise:.0%})")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) when a benchmark snapshot regresses "
+                    "against a committed baseline")
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("new", help="fresh benchmarks/run.py --json snapshot")
+    ap.add_argument("--fps-drop", type=float, default=0.2, metavar="FRAC",
+                    help="max tolerated relative FPS drop (default 0.2; use "
+                         "a generous value when machines differ)")
+    ap.add_argument("--latency-rise", type=float, default=0.5, metavar="FRAC",
+                    help="max tolerated relative us_per_call rise "
+                         "(default 0.5)")
+    ap.add_argument("--no-strict-derived", action="store_true",
+                    help="tolerate drift of deterministic (non-volatile) "
+                         "derived values, e.g. across jax versions")
+    args = ap.parse_args(argv)
+
+    base = load_snapshot(args.baseline)
+    new = load_snapshot(args.new)
+    for snap, path in ((base, args.baseline), (new, args.new)):
+        verify_digest(snap, path)
+
+    regs = compare_runs(base, new, fps_drop=args.fps_drop,
+                        latency_rise=args.latency_rise,
+                        strict_derived=not args.no_strict_derived)
+    checked = len(base["rows"])
+    if not regs:
+        print(f"OK: {checked} baseline rows within tolerance "
+              f"(fps-drop<={args.fps_drop:.0%}, "
+              f"latency-rise<={args.latency_rise:.0%})")
+        return 0
+    print(f"REGRESSION: {len(regs)} finding(s) over {checked} baseline rows")
+    for r in regs:
+        print(f"  [{r['kind']}] {r['row']}: {r['detail']}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

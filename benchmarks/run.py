@@ -23,6 +23,12 @@ machine (tests/test_bench_repro.py pins this).  Benchmarks:
   * e2e_pallas      — whole-network inference through ``repro.compile``:
                       compiled pallas vs compiled lax-int executables (FPS,
                       bit-exactness, modeled per-block HBM-traffic saving)
+  * e2e_stream      — the block-chain streaming megakernel
+                      (``pallas-stream``) vs the per-block pipeline:
+                      interleave-timed FPS both ways, the chain partition,
+                      modeled HBM bytes saved — the row the CI perf gate
+                      (``benchmarks/compare.py`` vs ``BENCH_0006.json``)
+                      tracks across PRs
   * e2e_tuned       — the autotuned pipeline (``repro.tune`` two-stage
                       search) vs the default config: FPS + speedup, the
                       chosen KernelConfig per task, cache hit/miss counts
@@ -226,6 +232,61 @@ def e2e_pallas():
              bit_exact=exact,
              mean_block_hbm_saving=round(float(np.mean(ratios)), 2),
              retraces=max(cm_p.trace_counts.values()),
+             inputs=input_digest(imgs))
+
+
+def e2e_stream():
+    """The block-chain streaming megakernel (``pallas-stream``) vs the
+    per-block fused pipeline (``pallas``), interleave-timed so host drift
+    cancels: FPS both ways, the planned chain partition, the modeled HBM
+    bytes the chain fusion saves (``core.dataflow.chain_saved_hbm_bytes``),
+    and bit-exactness vs the lax integer reference.  The per-row FPS pair is
+    the measurement half of ROADMAP item 3 — ``benchmarks/compare.py`` gates
+    CI on it against the committed ``BENCH_0006.json``."""
+    print("\n## e2e_stream — block-chain streaming megakernel vs per-block "
+          "kernels")
+    print("name,us_per_call,derived")
+    from repro.compile import compile_model, lowering
+    from repro.core import dataflow
+    from repro.models import resnet as R
+    from repro.tune import interleaved_time
+    batch = 4
+    imgs = jax.random.uniform(key(25), (batch, 32, 32, 3),
+                              minval=0.0, maxval=0.999)
+    for cfg in (R.RESNET8, R.RESNET20):
+        params = R.init_params(cfg, key(26))
+        qp = R.quantize_params(R.fold_params(params), cfg)
+        cm_s = compile_model(cfg, qp, backend="pallas-stream",
+                             batch_sizes=(batch,))
+        cm_p = compile_model(cfg, qp, backend="pallas", batch_sizes=(batch,))
+        cm_i = compile_model(cfg, qp, backend="lax-int", batch_sizes=(batch,))
+        exact = bool(np.array_equal(np.asarray(cm_s(imgs)),
+                                    np.asarray(cm_i(imgs))))
+        us_s, us_p = interleaved_time(cm_s, cm_p, imgs, reps=5)
+        plan = lowering.plan_model(lowering.optimized_graph(cfg))
+        chains = lowering.plan_chains(plan, cfg)
+        shapes = dataflow.resnet_block_shapes(cfg.blocks_per_stage,
+                                              cfg.base_width, cfg.img)
+        saved = sum(
+            dataflow.chain_saved_hbm_bytes(
+                [shapes[t.index] for t in c.blocks], batch)
+            + (2 * batch * shapes[0].in_bytes() if c.stem is not None else 0)
+            for c in chains)
+        per_block = sum(
+            dataflow.resblock_task_hbm_bytes(
+                s.h, s.w, s.ich, s.och, batch, 1,
+                downsample=s.downsample, stride=s.stride) for s in shapes)
+        kernels_stream = len(chains) + (1 if chains[0].stem is None else 0)
+        emit(f"e2e_stream/{cfg.name}", us_s,
+             fps=round(batch / (us_s / 1e6), 1),
+             default_fps=round(batch / (us_p / 1e6), 1),
+             speedup=round(us_p / us_s, 3),
+             bit_exact=exact,
+             chains="|".join(c.describe() for c in chains),
+             kernel_calls=kernels_stream,
+             per_block_kernel_calls=1 + len(shapes),
+             hbm_saved_B=saved,
+             hbm_saved_frac=round(saved / per_block, 3),
              inputs=input_digest(imgs))
 
 
@@ -447,8 +508,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as machine-readable JSON")
-    ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names to run")
+    ap.add_argument("--only", action="append", default=None, metavar="NAME",
+                    help="benchmark name(s) to run instead of the full "
+                         "suite; repeatable and/or comma-separated "
+                         "(--only e2e_pallas --only e2e_stream)")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed for every drawn benchmark input; the "
                          "JSON digest is reproducible per (code, seed)")
@@ -458,10 +521,11 @@ def main(argv=None) -> None:
     # prior run's rows leak into this run's JSON/digest
     benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
                    fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
-                   e2e_tuned=e2e_tuned, e2e_sharded=e2e_sharded,
-                   accuracy=accuracy, kernels_micro=kernels_micro,
-                   roofline=roofline)
-    names = args.only.split(",") if args.only else list(benches)
+                   e2e_stream=e2e_stream, e2e_tuned=e2e_tuned,
+                   e2e_sharded=e2e_sharded, accuracy=accuracy,
+                   kernels_micro=kernels_micro, roofline=roofline)
+    names = [n for arg in args.only for n in arg.split(",") if n] \
+        if args.only else list(benches)
     unknown = [n for n in names if n not in benches]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; "

@@ -183,6 +183,109 @@ class PallasBackend:
         return forward
 
 
+@register_backend("pallas-stream")
+class PallasStreamBackend:
+    """Block-chain streaming pipeline: the plan's block sequence is
+    partitioned into chains (``lowering.plan_chains``) and each chain runs
+    as ONE ``kernels.megakernel`` call — the running activation stays in
+    VMEM across every fused block boundary, chain weights pinned in VMEM,
+    the stem conv folded into the first chain when the budget allows.  The
+    TPU analogue of the paper's whole-network layer-to-layer streaming.
+
+    Chains the VMEM planner cut down to a single block (and a stem left
+    unfused) fall back to the per-block kernels — ``resblock_fused`` /
+    ``conv_stem`` — so the backend degrades gracefully to exactly the
+    ``pallas`` pipeline, never an illegal kernel.
+
+    Instantiate directly (``PallasStreamBackend(cuts=[[0], [1, 2]])``) to
+    pin an explicit chain partition — any partition into consecutive runs
+    is bit-exact with every other (the chain-cut conformance property)."""
+
+    def __init__(self, cuts=None, fuse_stem: bool = True, vmem_budget=None):
+        self.cuts = cuts
+        self.fuse_stem = fuse_stem
+        self.vmem_budget = vmem_budget
+
+    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+        from repro.core import dataflow
+        from repro.kernels.conv_stem.ops import conv_stem_op
+        from repro.kernels.megakernel.megakernel import ChainBlockSpec
+        from repro.kernels.megakernel.ops import block_chain_op
+        from repro.kernels.resblock_fused.ops import resblock_fused_op
+        from repro.tune import space as tspace
+
+        plan = lowering.plan_model(g, params)
+        chains = lowering.plan_chains(plan, cfg, cuts=self.cuts,
+                                      fuse_stem=self.fuse_stem,
+                                      vmem_budget=self.vmem_budget)
+        shapes = dataflow.resnet_block_shapes(cfg.blocks_per_stage,
+                                              cfg.base_width, cfg.img)
+        budget = tspace.VMEM_BUDGET if self.vmem_budget is None \
+            else self.vmem_budget
+
+        def chain_config(chain, batch):
+            # untuned chains default to the LARGEST VMEM-legal batch tile:
+            # chain weights are pinned across grid steps, so bigger tiles
+            # only amortize — and they feed the batched tap GEMMs more rows
+            if chain.config is not None:
+                return chain.config
+            legal = tspace.chain_space(
+                [shapes[t.index] for t in chain.blocks], batch,
+                stem_och=cfg.base_width if chain.stem is not None else 0,
+                vmem_budget=budget)
+            return max(legal, key=lambda c: c.batch_tile) if legal else None
+        stem_out, block_outs = activation_out_specs(params, A_SPEC)
+        st = params.stem
+        stem_shift = stem_out.exp - st.product_exp
+
+        # static per-chain schedule: (operand pytree, ChainBlockSpec tuple)
+        lowered = []
+        for chain in chains:
+            ops, specs = [], []
+            for task in chain.blocks:
+                blk = params.blocks[task.index]
+                sh = blk.shifts_for(block_outs[task.index].exp)
+                ws = [blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
+                      blk.conv1.wq, blk.conv1.bq.astype(jnp.int32)]
+                if task.has_ds:
+                    ws += [blk.ds.wq, blk.ds.bq.astype(jnp.int32)]
+                ops.append(tuple(ws))
+                specs.append(ChainBlockSpec(
+                    stride=task.stride, has_ds=task.has_ds, **sh))
+            lowered.append((chain, tuple(ops), tuple(specs)))
+
+        def forward(images):
+            h = Q.quantize(images, st.x_spec)
+            if not chains or chains[0].stem is None:
+                # stem not fused into the first chain: per-kernel fallback
+                h = conv_stem_op(h, st.wq, st.bq, shift=stem_shift,
+                                 config=plan.stem.config)
+            for chain, ops, specs in lowered:
+                if len(specs) == 1 and chain.stem is None:
+                    # singleton chain: the megakernel would add nothing —
+                    # run the plain fused block
+                    task, = chain.blocks
+                    blk = params.blocks[task.index]
+                    sh = blk.shifts_for(block_outs[task.index].exp)
+                    wd = blk.ds.wq if task.has_ds else None
+                    bd = blk.ds.bq.astype(jnp.int32) if task.has_ds else None
+                    h = resblock_fused_op(
+                        h, blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
+                        blk.conv1.wq, blk.conv1.bq.astype(jnp.int32),
+                        wd, bd, stride=task.stride, config=task.config, **sh)
+                    continue
+                stem = (st.wq, st.bq.astype(jnp.int32)) \
+                    if chain.stem is not None else None
+                h = block_chain_op(
+                    h, ops, specs=specs, stem=stem,
+                    stem_shift=stem_shift if chain.stem is not None else None,
+                    config=chain_config(chain, images.shape[0]))
+            return _float_head(h, params.fc,
+                               block_outs[-1] if block_outs else stem_out)
+
+        return forward
+
+
 @register_backend("float")
 class FloatBackend:
     """Float emulation of the integer graph on the same pow2 grids: convs run

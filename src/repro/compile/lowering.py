@@ -57,6 +57,28 @@ class HeadTask:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChainTask:
+    """A run of consecutive residual blocks fused into ONE streaming
+    megakernel call (``kernels.megakernel``), optionally with the stem conv
+    at its head.  The chain's tuned config is its first member's (the
+    megakernel's only knob is ``batch_tile``; ``cout_block`` is
+    fusion-illegal chain-wide)."""
+    blocks: tuple             # Tuple[BlockTask, ...], consecutive indices
+    stem: Optional[StemTask] = None
+
+    @property
+    def config(self) -> Optional[KernelConfig]:
+        if self.stem is not None and self.stem.config is not None:
+            return self.stem.config
+        return self.blocks[0].config if self.blocks else None
+
+    def describe(self) -> str:
+        parts = (["stem"] if self.stem is not None else []) + \
+            [f"b{t.index}" for t in self.blocks]
+        return "+".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
 class LoweringPlan:
     stem: StemTask
     blocks: List[BlockTask]
@@ -182,3 +204,57 @@ def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPl
                     f"block {t.index}: graph downsample={t.has_ds} but "
                     f"params downsample={params.blocks[t.index].has_ds}")
     return plan
+
+
+def plan_chains(plan: LoweringPlan, cfg, cuts=None, fuse_stem: bool = True,
+                vmem_budget: Optional[int] = None) -> List[ChainTask]:
+    """Partition the plan's block sequence into streaming chains — the front
+    half of the ``pallas-stream`` backend.
+
+    ``cuts`` (optional) is an explicit partition as lists of block indices;
+    it must be consecutive runs covering every block exactly once (any such
+    partition is arithmetically legal — the chain-cut conformance property —
+    so an explicit cut is only shape-checked, not budget-checked).  Without
+    it the greedy VMEM-budget planner (``tune.space.chain_cut_points``)
+    picks the longest legal runs: chain weights are pinned in VMEM, so a
+    chain is cut where its pinned set + streaming working set would exceed
+    the budget.  ``fuse_stem`` pulls the stem conv into the first chain when
+    that chain stays legal with it; otherwise the stem runs as its own
+    ``conv_stem`` kernel."""
+    from repro.core import dataflow
+    from repro.tune import space as tspace
+
+    budget = tspace.VMEM_BUDGET if vmem_budget is None else vmem_budget
+    shapes = dataflow.resnet_block_shapes(cfg.blocks_per_stage,
+                                          cfg.base_width, cfg.img)
+    if len(shapes) != len(plan.blocks):
+        raise LoweringError(
+            f"config yields {len(shapes)} block shapes but the plan has "
+            f"{len(plan.blocks)} blocks")
+
+    stem_och = cfg.base_width if fuse_stem else 0
+    if cuts is None:
+        # legality at batch_tile=1 is the binding constraint (any batch
+        # bucket admits bt=1), so the partition is bucket-independent
+        cuts = tspace.chain_cut_points(shapes, batch=1, stem_och=stem_och,
+                                       vmem_budget=budget)
+    else:
+        seen = [i for run in cuts for i in run]
+        if seen != list(range(len(plan.blocks))):
+            raise LoweringError(
+                f"chain cuts {cuts} are not a partition of blocks "
+                f"0..{len(plan.blocks) - 1} into consecutive runs")
+
+    chains = []
+    for run in cuts:
+        stem = None
+        if fuse_stem and run and run[0] == 0:
+            # the stem joins the first chain only if the joined chain still
+            # has a legal tiling; otherwise it stays a separate kernel
+            if tspace.chain_space([shapes[i] for i in run], batch=1,
+                                  stem_och=cfg.base_width,
+                                  vmem_budget=budget):
+                stem = plan.stem
+        chains.append(ChainTask(
+            blocks=tuple(plan.blocks[i] for i in run), stem=stem))
+    return chains

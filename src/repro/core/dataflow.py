@@ -234,6 +234,132 @@ def resblock_task_vmem_bytes(h: int, w: int, ich: int, och: int,
 
 
 # ---------------------------------------------------------------------------
+# TPU adaptation: block-chain streaming (megakernel) HBM traffic + VMEM
+# footprint.  The paper's layer-to-layer streaming (§III-D) fuses across
+# block boundaries: a chain of consecutive residual blocks executes in one
+# kernel, the running activation never leaving VMEM between blocks.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    """Static shape of one residual block as a chain link: input map
+    ``h x w x ich``, output ``(h//stride) x (w//stride) x och``."""
+    h: int
+    w: int
+    ich: int
+    och: int
+    downsample: bool = False
+    stride: int = 1
+
+    @property
+    def oh(self) -> int:
+        return self.h // self.stride
+
+    @property
+    def ow(self) -> int:
+        return self.w // self.stride
+
+    def weight_bytes(self, w_bytes: int = 1) -> int:
+        """Both 3x3 filters (+ the 1x1 downsample when present) + biases."""
+        wts = 9 * self.ich * self.och + 9 * self.och * self.och
+        if self.downsample:
+            wts += self.ich * self.och
+        return wts * w_bytes + 2 * self.och * 4
+
+    def in_bytes(self, act_bytes: int = 1) -> int:
+        return self.h * self.w * self.ich * act_bytes
+
+    def out_bytes(self, act_bytes: int = 1) -> int:
+        return self.oh * self.ow * self.och * act_bytes
+
+
+def chain_saved_hbm_bytes(blocks: List[BlockShape], batch: int,
+                          act_bytes: int = 1) -> int:
+    """HBM activation bytes the chain fusion removes vs per-block kernels:
+    every *interior* boundary activation is written by block j and re-read by
+    block j+1 in per-block execution — the chain keeps it in VMEM, saving
+    both movements."""
+    return 2 * batch * sum(b.out_bytes(act_bytes) for b in blocks[:-1])
+
+
+def chain_task_hbm_bytes(blocks: List[BlockShape], batch: int,
+                         batch_tile: int, stem_och: int = 0,
+                         act_bytes: int = 1, w_bytes: int = 1) -> int:
+    """HBM bytes one block-chain megakernel moves for a ``batch``: the chain
+    input is read once, the chain output written once, and the chain's
+    pinned weight set is fetched once per batch-grid step.  ``stem_och > 0``
+    fuses the 3x3 stem conv at the chain head (its input becomes the chain
+    input; one more interior boundary stays in VMEM).
+
+    Identity (pinned by tests/test_dataflow.py): this equals the sum of the
+    per-block ``resblock_task_hbm_bytes`` minus :func:`chain_saved_hbm_bytes`
+    — fusion only ever removes interior activation round trips, never
+    weight traffic."""
+    first = blocks[0]
+    if stem_och:
+        # the chain input is the image; the stem boundary activation also
+        # stays in VMEM (one more interior boundary saved)
+        acts = batch * (first.h * first.w * 3 * act_bytes
+                        + blocks[-1].out_bytes(act_bytes))
+    else:
+        acts = batch * (first.in_bytes(act_bytes)
+                        + blocks[-1].out_bytes(act_bytes))
+    steps = batch // max(1, batch_tile)
+    wts = sum(b.weight_bytes(w_bytes) for b in blocks)
+    if stem_och:
+        wts += 9 * 3 * stem_och * w_bytes + stem_och * 4
+    return acts + wts * steps
+
+
+def chain_task_vmem_bytes(blocks: List[BlockShape], batch_tile: int,
+                          stem_och: int = 0, act_bytes: int = 1,
+                          w_bytes: int = 1) -> int:
+    """Per-grid-step VMEM footprint of the chain megakernel — what decides a
+    chain cut.  The whole chain's weights are pinned for the kernel's
+    lifetime (constant-index BlockSpecs), the batch input/output tiles are
+    resident, and the streaming working set is the *maximum* over links of
+    the batch tile's per-block intermediates (padded input, padded y0, int32
+    accumulator + aligned skip): the kernel body processes its whole tile
+    per link (batched tap dots), and links execute sequentially."""
+    first = blocks[0]
+    ich0 = 3 if stem_och else first.ich
+    in_tile = batch_tile * (first.h + 2) * (first.w + 2) * ich0 * act_bytes
+    wts = sum(b.weight_bytes(w_bytes) for b in blocks)
+    if stem_och:
+        wts += 9 * 3 * stem_och * w_bytes + stem_och * 4
+    work = 0
+    if stem_och:
+        work = (first.h * first.w * stem_och            # stem output
+                + first.h * first.w * stem_och * 4)     # stem accumulator
+    for b in blocks:
+        per_img = ((b.h + 2) * (b.w + 2) * b.ich * act_bytes   # padded input
+                   + (b.oh + 2) * (b.ow + 2) * b.och * act_bytes  # padded y0
+                   + b.oh * b.ow * b.och * 4                   # accumulator
+                   + b.oh * b.ow * b.och * 4)                  # aligned skip
+        work = max(work, per_img)
+    out_tile = batch_tile * blocks[-1].out_bytes(act_bytes)
+    return in_tile + wts + batch_tile * work + out_tile
+
+
+def resnet_block_shapes(blocks_per_stage: int, base: int = 16, img: int = 32
+                        ) -> List[BlockShape]:
+    """The :class:`BlockShape` chain of a whole ResNet in graph order —
+    the block-level view of :func:`resnet_layers`."""
+    out = []
+    ich, res = base, img
+    for stage in range(3):
+        och = base * (2 ** stage)
+        for b in range(blocks_per_stage):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            out.append(BlockShape(h=res, w=res, ich=ich, och=och,
+                                  downsample=(stride != 1 or ich != och),
+                                  stride=stride))
+            ich, res = och, res // stride
+    return out
+
+
+# ---------------------------------------------------------------------------
 # ResNet layer tables (mirrors graph.build_resnet_graph; used by ILP/benchmarks)
 # ---------------------------------------------------------------------------
 

@@ -60,39 +60,61 @@ def _conv_tap_acc(x, w, oh, ow, acc, stride=1):
     return acc
 
 
+def block_body(xp, w0, b0, w1, b1, wd, bd, *, stride, shift0, shift1,
+               skip_shift):
+    """One residual block on a single image's *padded* activation ``xp``
+    (``(Hp, Wp, Cin)`` uint8, the module's SAME convention): conv0 (strided)
+    -> ReLU/requant -> [fused 1x1 downsample] skip align -> conv1 with the
+    skip initializing its accumulator -> ReLU/requant.  Everything stays in
+    registers/VMEM; returns the unpadded ``(oh, ow, Cout)`` uint8 output.
+
+    This is the shared streaming datapath: ``resblock_fused`` runs it once
+    per image, the block-chain ``megakernel`` runs a whole sequence of them
+    back to back without the activation ever leaving VMEM."""
+    has_ds = wd is not None
+    pad_lo = 1 if stride == 1 else 0
+    oh = (xp.shape[0] - 3) // stride + 1
+    ow = (xp.shape[1] - 3) // stride + 1
+    co = b0.shape[0]
+    # ---- conv0 (strided) + relu + requant (stays in VMEM) ----
+    acc0 = jnp.broadcast_to(b0.astype(jnp.int32),
+                            (oh, ow, co)).astype(jnp.int32)
+    acc0 = _conv_tap_acc(xp, w0, oh, ow, acc0, stride)
+    y0 = requant_u8(acc0, shift0)                       # (oh,ow,Cout)
+    y0p = jnp.pad(y0, ((1, 1), (1, 1), (0, 0)))
+    # ---- skip stream, rescaled into conv1's product domain ----
+    if has_ds:
+        # fused 1x1 downsample conv: SAME padding of a 1x1 conv is zero,
+        # so output o reads x[o*stride] = xp[pad_lo + o*stride]
+        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                           (pad_lo + (oh - 1) * stride + 1,
+                            pad_lo + (ow - 1) * stride + 1, xp.shape[2]),
+                           (stride, stride, 1))         # (oh,ow,Cin)
+        accd = jax.lax.dot(
+            xs.reshape(oh * ow, -1).astype(jnp.int32),
+            wd[0, 0].astype(jnp.int32),
+            preferred_element_type=jnp.int32).reshape(oh, ow, -1)
+        accd = accd + bd.astype(jnp.int32)
+        skip = shift_align(accd, skip_shift)
+    else:
+        xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
+                           (pad_lo + oh, pad_lo + ow, xp.shape[2]))
+        skip = shift_align(xs, skip_shift)
+    # ---- conv1 with add-fold: skip initializes the accumulator ----
+    acc1 = skip + b1.astype(jnp.int32)
+    acc1 = _conv_tap_acc(y0p, w1, oh, ow, acc1)
+    return requant_u8(acc1, shift1)
+
+
 def _kernel(x_ref, w0_ref, b0_ref, w1_ref, b1_ref, wd_ref, bd_ref, o_ref, *,
-            oh, ow, stride, shift0, shift1, skip_shift, has_ds, pad_lo, bt):
-    co = b0_ref.shape[0]
+            stride, shift0, shift1, skip_shift, has_ds, bt):
     for i in range(bt):
-        xp = x_ref[i]                       # (Hp, Wp, Cin) uint8 padded
-        # ---- conv0 (strided) + relu + requant (stays in VMEM) ----
-        acc0 = jnp.broadcast_to(b0_ref[...].astype(jnp.int32),
-                                (oh, ow, co)).astype(jnp.int32)
-        acc0 = _conv_tap_acc(xp, w0_ref[...], oh, ow, acc0, stride)
-        y0 = requant_u8(acc0, shift0)                       # (oh,ow,Cout)
-        y0p = jnp.pad(y0, ((1, 1), (1, 1), (0, 0)))
-        # ---- skip stream, rescaled into conv1's product domain ----
-        if has_ds:
-            # fused 1x1 downsample conv: SAME padding of a 1x1 conv is zero,
-            # so output o reads x[o*stride] = xp[pad_lo + o*stride]
-            xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
-                               (pad_lo + (oh - 1) * stride + 1,
-                                pad_lo + (ow - 1) * stride + 1, xp.shape[2]),
-                               (stride, stride, 1))         # (oh,ow,Cin)
-            accd = jax.lax.dot(
-                xs.reshape(oh * ow, -1).astype(jnp.int32),
-                wd_ref[...][0, 0].astype(jnp.int32),
-                preferred_element_type=jnp.int32).reshape(oh, ow, -1)
-            accd = accd + bd_ref[...].astype(jnp.int32)
-            skip = shift_align(accd, skip_shift)
-        else:
-            xs = jax.lax.slice(xp, (pad_lo, pad_lo, 0),
-                               (pad_lo + oh, pad_lo + ow, xp.shape[2]))
-            skip = shift_align(xs, skip_shift)
-        # ---- conv1 with add-fold: skip initializes the accumulator ----
-        acc1 = skip + b1_ref[...].astype(jnp.int32)
-        acc1 = _conv_tap_acc(y0p, w1_ref[...], oh, ow, acc1)
-        o_ref[i] = requant_u8(acc1, shift1)
+        o_ref[i] = block_body(
+            x_ref[i], w0_ref[...], b0_ref[...], w1_ref[...], b1_ref[...],
+            wd_ref[...] if has_ds else None,
+            bd_ref[...] if has_ds else None,
+            stride=stride, shift0=shift0, shift1=shift1,
+            skip_shift=skip_shift)
 
 
 def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
@@ -108,7 +130,6 @@ def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
     N, Hp, Wp, Cin = x.shape
     Cout = w0.shape[-1]
     has_ds = wd is not None
-    pad_lo = 1 if stride == 1 else 0
     bt = N if batch_tile == 0 else batch_tile
     assert N % bt == 0, (N, bt)
     oh = (Hp - 3) // stride + 1
@@ -118,9 +139,9 @@ def resblock_fused(x, w0, b0, w1, b1, wd=None, bd=None, *, stride=1,
         wd = jnp.zeros((1, 1, Cin, Cout), jnp.int8)
         bd = jnp.zeros((Cout,), jnp.int32)
     return pl.pallas_call(
-        functools.partial(_kernel, oh=oh, ow=ow, stride=stride, shift0=shift0,
+        functools.partial(_kernel, stride=stride, shift0=shift0,
                           shift1=shift1, skip_shift=skip_shift, has_ds=has_ds,
-                          pad_lo=pad_lo, bt=bt),
+                          bt=bt),
         grid=(N // bt,),
         in_specs=[
             pl.BlockSpec((bt, Hp, Wp, Cin), lambda n: (n, 0, 0, 0)),

@@ -69,6 +69,50 @@ def block_space(layer0: dataflow.ConvLayer, batch: int,
     return out
 
 
+def chain_space(blocks, batch: int, stem_och: int = 0,
+                vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal batch tilings for one block-chain megakernel (``blocks`` is a
+    list of :class:`~repro.core.dataflow.BlockShape` chain links, in order;
+    ``stem_och > 0`` fuses the stem at the head).  A chain whose pinned
+    weights + streaming working set exceed the VMEM budget at *every* batch
+    tile is unschedulable — the empty list tells the planner to cut it
+    shorter.  Channel blocking is fusion-illegal, as for the single fused
+    block (rule 4)."""
+    out = []
+    for bt in divisors(batch):
+        vmem = dataflow.chain_task_vmem_bytes(blocks, bt, stem_och=stem_och)
+        if vmem <= vmem_budget:
+            out.append(KernelConfig(batch_tile=bt))
+    return out
+
+
+def chain_cut_points(blocks, batch: int, stem_och: int = 0,
+                     vmem_budget: int = VMEM_BUDGET) -> List[List[int]]:
+    """Greedy longest-legal partition of a model's block sequence into
+    chains: extend the open chain while :func:`chain_space` still has a
+    legal tiling, else cut.  ``blocks`` is the whole-model
+    ``dataflow.resnet_block_shapes`` list; returns lists of block indices.
+    Any partition into runs of consecutive blocks is *arithmetically* legal
+    (asserted by the conformance chain-cut property test); this picks the
+    one that minimizes HBM boundary traffic under the VMEM cap."""
+    cuts, open_chain = [], []
+    for i, _ in enumerate(blocks):
+        cand = open_chain + [i]
+        och = stem_och if (not cuts and cand[0] == 0) else 0
+        if chain_space([blocks[j] for j in cand], batch, stem_och=och,
+                       vmem_budget=vmem_budget):
+            open_chain = cand
+            continue
+        if open_chain:
+            cuts.append(open_chain)
+        # a single block over budget still has to run somewhere: emit it as
+        # a singleton chain (the backend falls back to resblock_fused)
+        open_chain = [i]
+    if open_chain:
+        cuts.append(open_chain)
+    return cuts
+
+
 def model_space(cfg, batch: int,
                 vmem_budget: int = VMEM_BUDGET
                 ) -> Dict[str, List[KernelConfig]]:

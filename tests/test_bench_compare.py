@@ -1,0 +1,167 @@
+"""benchmarks/compare.py — the perf-regression gate's own contract.
+
+The gate is only as good as its failure modes: it must fire on a real FPS
+regression, stay quiet under measurement noise, treat the committed
+``BENCH_0006.json`` as schema-stable (digest survives a JSON round trip),
+and hard-fail on correctness flips and silently dropped rows regardless of
+any wall-clock tolerance.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.compare import compare_runs, load_snapshot, verify_digest
+from benchmarks.run import run_digest
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_0006.json")
+
+
+def _row(name, us, derived):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+@pytest.fixture()
+def snap():
+    return {
+        "seed": 0,
+        "rows": [
+            _row("e2e_stream/resnet8", 5000,
+                 {"fps": 800.0, "default_fps": 500.0, "speedup": 1.6,
+                  "bit_exact": True, "chains": "stem+b0+b1+b2",
+                  "hbm_saved_B": 327680}),
+            _row("e2e_pallas/resnet8", 8000,
+                 {"fps": 500.0, "bit_exact": True}),
+        ],
+    }
+
+
+def test_flags_20pct_fps_drop(snap):
+    new = copy.deepcopy(snap)
+    new["rows"][0]["derived"]["fps"] = 800.0 * 0.79       # > 20% down
+    regs = compare_runs(snap, new, fps_drop=0.2)
+    assert [r["kind"] for r in regs] == ["fps"]
+    assert regs[0]["row"] == "e2e_stream/resnet8"
+
+
+def test_passes_within_noise(snap):
+    new = copy.deepcopy(snap)
+    new["rows"][0]["derived"]["fps"] = 800.0 * 0.85       # 15% < 20% gate
+    new["rows"][1]["derived"]["fps"] = 500.0 * 1.30       # faster never fails
+    new["rows"][0]["us_per_call"] = 5000 * 1.4            # < 50% rise
+    assert compare_runs(snap, new, fps_drop=0.2, latency_rise=0.5) == []
+
+
+def test_latency_rise_beyond_tolerance_fails(snap):
+    new = copy.deepcopy(snap)
+    new["rows"][1]["us_per_call"] = 8000 * 1.6
+    regs = compare_runs(snap, new, fps_drop=0.2, latency_rise=0.5)
+    assert [r["kind"] for r in regs] == ["latency"]
+
+
+def test_bit_exact_flip_is_hard_failure(snap):
+    """bit_exact True -> False must fail even with infinite wall-clock
+    tolerance: exactness is machine-independent."""
+    new = copy.deepcopy(snap)
+    new["rows"][0]["derived"]["bit_exact"] = False
+    regs = compare_runs(snap, new, fps_drop=1e9, latency_rise=1e9)
+    assert [r["kind"] for r in regs] == ["correctness"]
+
+
+def test_missing_baseline_row_fails(snap):
+    new = copy.deepcopy(snap)
+    del new["rows"][1]
+    regs = compare_runs(snap, new)
+    assert [r["kind"] for r in regs] == ["missing-row"]
+
+
+def test_extra_new_rows_are_ignored(snap):
+    new = copy.deepcopy(snap)
+    new["rows"].append(_row("e2e_stream/resnet110", 1, {"fps": 1.0}))
+    assert compare_runs(snap, new) == []
+
+
+def test_deterministic_derived_drift_fails_strict_only(snap):
+    """Non-volatile derived values (here: the planned chain partition) are
+    functions of code+seed; drift is a behaviour change under the default
+    strict mode but tolerated with strict_derived=False."""
+    new = copy.deepcopy(snap)
+    new["rows"][0]["derived"]["chains"] = "stem+b0|b1+b2"
+    regs = compare_runs(snap, new)
+    assert [r["kind"] for r in regs] == ["derived-drift"]
+    assert compare_runs(snap, new, strict_derived=False) == []
+
+
+def test_volatile_derived_never_gates(snap):
+    """speedup is VOLATILE (a ratio of two wall clocks): halving it alone
+    must not fire anything."""
+    new = copy.deepcopy(snap)
+    new["rows"][0]["derived"]["speedup"] = 0.8
+    assert compare_runs(snap, new) == []
+
+
+# ---- the committed snapshot itself ----------------------------------------
+
+def test_bench_0006_round_trips_digest_stable(tmp_path):
+    """The committed baseline re-serializes to the same digest: the file is
+    self-consistent and json.dump/load does not perturb the gated schema."""
+    base = load_snapshot(BASELINE)
+    verify_digest(base, BASELINE)
+    p = tmp_path / "roundtrip.json"
+    p.write_text(json.dumps(base))
+    again = load_snapshot(str(p))
+    verify_digest(again, str(p))
+    assert run_digest(again["rows"]) == base["digest"]
+
+
+def test_bench_0006_streamed_chain_beats_per_block():
+    """The acceptance criterion of the streaming megakernel PR, pinned as a
+    test: the committed snapshot shows the chain beating the per-block
+    pipeline on at least one model, bit-exactly."""
+    base = load_snapshot(BASELINE)
+    stream = [r for r in base["rows"] if r["name"].startswith("e2e_stream/")]
+    assert stream, "baseline lost its e2e_stream rows"
+    assert all(r["derived"]["bit_exact"] for r in stream)
+    assert any(r["derived"]["fps"] > r["derived"]["default_fps"]
+               for r in stream)
+
+
+def test_bench_0006_compares_clean_against_itself():
+    base = load_snapshot(BASELINE)
+    assert compare_runs(base, copy.deepcopy(base)) == []
+
+
+def test_tampered_baseline_rejected(tmp_path):
+    base = load_snapshot(BASELINE)
+    base["rows"][0]["derived"]["bit_exact"] = False        # hand-edit
+    p = tmp_path / "tampered.json"
+    p.write_text(json.dumps(base))
+    with pytest.raises(ValueError, match="edited"):
+        verify_digest(load_snapshot(str(p)), str(p))
+
+
+def test_cli_exit_codes(tmp_path, snap):
+    """The __main__ entry point: 0 on clean, 1 on regression — what the CI
+    step keys off."""
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(snap))
+    good.write_text(json.dumps(snap))
+    worse = copy.deepcopy(snap)
+    worse["rows"][0]["derived"]["fps"] = 100.0
+    bad.write_text(json.dumps(worse))
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    ok = subprocess.run([sys.executable, "-m", "benchmarks.compare",
+                         str(base), str(good)], cwd=root, env=env)
+    assert ok.returncode == 0
+    fail = subprocess.run([sys.executable, "-m", "benchmarks.compare",
+                           str(base), str(bad)], cwd=root, env=env,
+                          capture_output=True, text=True)
+    assert fail.returncode == 1
+    assert "REGRESSION" in fail.stdout

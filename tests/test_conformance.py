@@ -3,8 +3,11 @@
 ONE parametrized suite asserting the serving contract over the whole grid:
 
     {resnet8, resnet20} x {default, tuned KernelConfig} x {every compiled
-    batch bucket, incl. zero-pad and chunk paths} x {pallas vs lax-int
-    bit-exact, float within tolerance}
+    batch bucket, incl. zero-pad and chunk paths} x {pallas and
+    pallas-stream vs lax-int bit-exact, float within tolerance}
+
+plus the chain-cut property: every partition of the block sequence into
+consecutive runs served through ``pallas-stream`` yields identical logits.
 
 This replaces the ad-hoc per-file parity checks that used to live in
 tests/test_pallas_forward.py and tests/test_compile.py (each pinned one
@@ -96,6 +99,52 @@ def test_pallas_bit_exact_with_lax_int(matrix, arch, variant, n):
     _, pallas = matrix(arch, variant, "pallas")
     _, lax = matrix(arch, variant, "lax-int")
     np.testing.assert_array_equal(pallas[n], lax[n])
+
+
+@pytest.mark.parametrize("n", BATCHES)
+@pytest.mark.parametrize("variant", list(VARIANTS))
+@pytest.mark.parametrize("arch", list(CFGS))
+def test_pallas_stream_bit_exact_with_lax_int(matrix, arch, variant, n):
+    """The block-chain streaming backend must match the lax integer
+    reference bit for bit at every bucket/pad/chunk path and every tiling —
+    fusing blocks into one megakernel may never change a single logit."""
+    _, stream = matrix(arch, variant, "pallas-stream")
+    _, lax = matrix(arch, variant, "lax-int")
+    np.testing.assert_array_equal(stream[n], lax[n])
+
+
+@pytest.mark.parametrize("arch", list(CFGS))
+def test_chain_cut_property(qparams, images, arch):
+    """Chain-cut property: ANY partition of the block sequence into runs of
+    consecutive blocks — including every singleton, the whole network, and
+    uneven splits around the stride-2 stage boundaries — produces logits
+    identical to the un-chained pipeline.  Cut selection is therefore purely
+    a VMEM-budget decision, never a correctness one."""
+    from repro.compile.backends import PallasStreamBackend
+
+    cfg = CFGS[arch]
+    n_blocks = 3 * cfg.blocks_per_stage
+    bps = cfg.blocks_per_stage
+    partitions = [
+        [[i] for i in range(n_blocks)],                     # all singletons
+        [list(range(n_blocks))],                            # whole network
+        [list(range(i * bps, (i + 1) * bps))
+         for i in range(3)],                                # per stage
+        [[0], list(range(1, n_blocks))],                    # lopsided
+        [list(range(n_blocks - 1)), [n_blocks - 1]],        # lopsided tail
+    ]
+    ref = np.asarray(compile_model(
+        cfg, qparams[arch], backend="lax-int",
+        batch_sizes=BUCKETS)(images[:3]))
+    for cuts in partitions:
+        for fuse_stem in (True, False):
+            cm = compile_model(
+                cfg, qparams[arch],
+                backend=PallasStreamBackend(cuts=cuts, fuse_stem=fuse_stem),
+                batch_sizes=BUCKETS)
+            np.testing.assert_array_equal(
+                np.asarray(cm(images[:3])), ref,
+                err_msg=f"cuts={cuts} fuse_stem={fuse_stem}")
 
 
 @pytest.mark.parametrize("n", BATCHES)

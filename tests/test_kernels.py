@@ -234,3 +234,115 @@ def test_flash_attention_dtypes(dtype):
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# megakernel — block-chain streaming kernel == unfused per-block oracle
+# ---------------------------------------------------------------------------
+
+
+def _chain_blocks(key, links):
+    """Random weights + specs for a chain described as (Cin, Cout, stride)
+    links; returns (blocks, specs) for block_chain_op/block_chain_ref."""
+    from repro.kernels.megakernel.megakernel import ChainBlockSpec
+    blocks, specs = [], []
+    for i, (cin, cout, stride) in enumerate(links):
+        k = jax.random.fold_in(key, i)
+        has_ds = stride != 1 or cin != cout
+        ws = [_i8(jax.random.fold_in(k, 1), 3, 3, cin, cout),
+              jax.random.randint(jax.random.fold_in(k, 2), (cout,), -500,
+                                 500, jnp.int32),
+              _i8(jax.random.fold_in(k, 3), 3, 3, cout, cout),
+              jax.random.randint(jax.random.fold_in(k, 4), (cout,), -500,
+                                 500, jnp.int32)]
+        if has_ds:
+            ws += [_i8(jax.random.fold_in(k, 5), 1, 1, cin, cout),
+                   jax.random.randint(jax.random.fold_in(k, 6), (cout,),
+                                      -500, 500, jnp.int32)]
+        blocks.append(tuple(ws))
+        specs.append(ChainBlockSpec(stride=stride, has_ds=has_ds, shift0=8,
+                                    shift1=8, skip_shift=1 - i % 3))
+    return tuple(blocks), tuple(specs)
+
+
+CHAINS = [
+    [(8, 8, 1)],                                   # singleton
+    [(8, 8, 1), (8, 8, 1)],                        # identity pair
+    [(8, 8, 1), (8, 16, 2), (16, 16, 1)],          # stride-2 mid-chain
+    [(4, 8, 2), (8, 16, 2)],                       # stride-2 chain head
+]
+
+
+@pytest.mark.parametrize("links", CHAINS, ids=lambda l: f"{len(l)}links")
+@pytest.mark.parametrize("N,bt", [(1, 1), (4, 1), (4, 2), (4, 4)])
+def test_block_chain_bitexact(links, N, bt):
+    from repro.kernels.megakernel.ops import block_chain_op
+    from repro.kernels.megakernel.ref import block_chain_ref
+    from repro.tune.config import KernelConfig
+    key = jax.random.PRNGKey(len(links) * 7 + N)
+    x = jax.random.randint(key, (N, 16, 16, links[0][0]), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    blocks, specs = _chain_blocks(jax.random.fold_in(key, 99), links)
+    out = block_chain_op(x, blocks, specs=specs,
+                         config=KernelConfig(batch_tile=bt))
+    ref = block_chain_ref(x, blocks, specs=specs)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("N,bt", [(2, 1), (2, 2)])
+def test_block_chain_fused_stem_bitexact(N, bt):
+    """Stem fused at the chain head: uint8 image -> stem conv -> chain, the
+    stem boundary never materialized."""
+    from repro.kernels.megakernel.ops import block_chain_op
+    from repro.kernels.megakernel.ref import block_chain_ref
+    from repro.tune.config import KernelConfig
+    key = jax.random.PRNGKey(17)
+    x = jax.random.randint(key, (N, 16, 16, 3), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    stem = (_i8(jax.random.fold_in(key, 1), 3, 3, 3, 8),
+            jax.random.randint(jax.random.fold_in(key, 2), (8,), -500, 500,
+                               jnp.int32))
+    blocks, specs = _chain_blocks(jax.random.fold_in(key, 3),
+                                  [(8, 8, 1), (8, 16, 2)])
+    out = block_chain_op(x, blocks, specs=specs, stem=stem, stem_shift=7,
+                         config=KernelConfig(batch_tile=bt))
+    ref = block_chain_ref(x, blocks, specs=specs, stem=stem, stem_shift=7)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_block_chain_equals_per_block_kernels():
+    """Chain output == running the SAME links through resblock_fused_op one
+    by one — the fusion moves boundaries into VMEM without touching a bit."""
+    from repro.kernels.megakernel.ops import block_chain_op
+    key = jax.random.PRNGKey(23)
+    links = [(8, 8, 1), (8, 16, 2), (16, 16, 1)]
+    x = jax.random.randint(key, (3, 8, 8, 8), 0, 256,
+                           jnp.int32).astype(jnp.uint8)
+    blocks, specs = _chain_blocks(jax.random.fold_in(key, 9), links)
+    out = block_chain_op(x, blocks, specs=specs)
+    h = x
+    for s, ws in zip(specs, blocks):
+        wd, bd = (ws[4], ws[5]) if s.has_ds else (None, None)
+        h = resblock_fused_op(h, ws[0], ws[1], ws[2], ws[3], wd, bd,
+                              stride=s.stride, shift0=s.shift0,
+                              shift1=s.shift1, skip_shift=s.skip_shift)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(h))
+
+
+def test_f32_emulation_bound_is_enforced():
+    """The interpret-mode fast path runs tap dots in float32 ONLY below the
+    2^24 exactness bound; a hypothetical wider-than-517-channel link must
+    fall back to integer dots (checked structurally, not numerically)."""
+    from repro.kernels.megakernel.megakernel import F32_EXACT_ROWS, _dot_i32
+    assert F32_EXACT_ROWS * 127 * 255 < 2 ** 24
+    assert (F32_EXACT_ROWS + 1) * 127 * 255 >= 2 ** 24
+    wide = jnp.ones((2, F32_EXACT_ROWS + 1), jnp.uint8)
+    wm = jnp.ones((F32_EXACT_ROWS + 1, 4), jnp.int8)
+    assert _dot_i32(wide, wm, fast_emul=True).dtype == jnp.int32
+    # the guarded path stays exact at the widest real chain width
+    rows = jax.random.randint(jax.random.PRNGKey(0), (64, 64), 0, 256,
+                              jnp.int32).astype(jnp.uint8)
+    w = _i8(jax.random.PRNGKey(1), 64, 32).reshape(64, 32)
+    np.testing.assert_array_equal(
+        np.asarray(_dot_i32(rows, w, fast_emul=True)),
+        np.asarray(_dot_i32(rows, w, fast_emul=False)))
