@@ -35,6 +35,11 @@ machine (tests/test_bench_repro.py pins this).  Benchmarks:
   * e2e_sharded     — scale-out serving (``serve.ShardedResNetEngine``):
                       FPS vs replica count + queue-wait/compute latency
                       percentiles through the deadline coalescer
+  * e2e_slo         — trace-driven SLO serving (``repro.traffic``): a seeded
+                      bursty trace simulated in virtual time against 1 vs N
+                      replicas with degradation A/B'd on/off — per-class
+                      deadline-hit-rate + effective accuracy under load
+                      (deterministic; only real wall time is VOLATILE)
   * accuracy        — the paper's accuracy story in miniature
                       (``repro.quantize``): float-train ResNet8 briefly on
                       the synthetic task, PTQ-calibrate, export, top-1 of
@@ -75,7 +80,7 @@ VOLATILE = frozenset({
     "fps", "int_graph_fps", "default_fps", "speedup", "search_us",
     "cache_hits", "cache_misses", "p50_wait_ms", "p99_wait_ms",
     "p50_compute_ms", "p99_compute_ms", "ticks", "config", "source",
-    "space_size",
+    "space_size", "wall_s",
 })
 
 
@@ -393,6 +398,76 @@ def e2e_sharded():
                  inputs=input_digest(imgs))
 
 
+def e2e_slo():
+    """Trace-driven SLO serving in virtual time (``repro.traffic``): a
+    seeded bursty arrival trace simulated against 1 vs N replicas, with the
+    overload router's accuracy-aware degradation A/B'd on/off.  The service
+    envelope keeps the paper's KV260 ResNet8:ResNet20 FPS ratio (~4x) scaled
+    down so the burst peak overloads ResNet20 capacity but not ResNet8's.
+    Per row: per-class deadline-hit-rate, degraded/dropped counts, and the
+    effective accuracy under load (per-variant top-1 through
+    ``repro.quantize.evaluate``'s serving harness; a dropped request scores
+    zero).  Queueing runs entirely on FakeClock, so every number except the
+    real wall clock (``wall_s``, VOLATILE) is deterministic per (code, seed)
+    and sits in the run digest."""
+    print("\n## e2e_slo — SLO classes + degradation under a bursty trace "
+          "(virtual time)")
+    print("name,us_per_call,derived")
+    from repro.models import resnet as R
+    from repro.quantize import synthetic_eval_set
+    from repro.serve.sched import FakeClock
+    from repro.traffic import (
+        DEFAULT_CLASSES, OverloadRouter, ServiceModel, SimServer, TrafficSim,
+        make_process, variant_accuracies)
+
+    rate, duration, eval_n = 2400.0, 0.4, 128
+    mix = {"interactive": 0.25, "standard": 0.5, "bulk": 0.25}
+    arrivals = make_process("bursty", rate, seed=SEED, class_mix=mix,
+                            burst_on_s=0.05, burst_off_s=0.05
+                            ).generate(horizon_s=duration)
+    variants = {}
+    for cfg in (R.RESNET20, R.RESNET8):
+        params = R.init_params(cfg, key(70))
+        variants[cfg.name] = (cfg,
+                              R.quantize_params(R.fold_params(params), cfg))
+    images, labels = synthetic_eval_set(eval_n, seed=SEED)
+    t0 = time.perf_counter()
+    acc = variant_accuracies(variants, images, labels, backend="lax-int")
+    eval_s = time.perf_counter() - t0
+    emit("e2e_slo/variants", eval_s * 1e6,
+         **{f"top1_{v}": round(a, 4) for v, a in sorted(acc.items())},
+         eval_n=eval_n, arrivals=len(arrivals), wall_s=round(eval_s, 3))
+    svc = {"resnet20": ServiceModel.from_fps(800.0),
+           "resnet8": ServiceModel.from_fps(3200.0)}
+    for n_rep in (1, 4):
+        for degrade in (False, True):
+            clock = FakeClock()
+            servers = {
+                "resnet20": SimServer("resnet20", svc["resnet20"], clock,
+                                      replicas=n_rep, max_batch=8),
+                "resnet8": SimServer("resnet8", svc["resnet8"], clock,
+                                     replicas=1, max_batch=8)}
+            router = OverloadRouter(DEFAULT_CLASSES, primary="resnet20",
+                                    degraded="resnet8", enabled=degrade)
+            sim = TrafficSim(servers, DEFAULT_CLASSES, router, clock)
+            t0 = time.perf_counter()
+            rep = sim.run(arrivals, accuracy_by_variant=acc)
+            wall = time.perf_counter() - t0
+            tot, cls = rep["totals"], rep["classes"]
+            emit(f"e2e_slo/r{n_rep}/degrade_{'on' if degrade else 'off'}",
+                 wall * 1e6,
+                 replicas=n_rep, degrade=degrade,
+                 sim_s=rep["duration_s"],
+                 hit_rate=tot["deadline_hit_rate"],
+                 **{f"hit_{name}": c["deadline_hit_rate"]
+                    for name, c in sorted(cls.items())},
+                 served=tot["served"], dropped=tot["dropped"],
+                 degraded=tot["degraded"],
+                 effective_top1=rep["accuracy"]["effective_top1"],
+                 accuracy_cost=rep["accuracy"]["accuracy_cost"],
+                 wall_s=round(wall, 3))
+
+
 def accuracy():
     """The accuracy half of the reproduction (``repro.quantize``): a short
     seeded float train of ResNet8 on the synthetic task, PTQ calibration to
@@ -522,7 +597,8 @@ def main(argv=None) -> None:
     benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
                    fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
                    e2e_stream=e2e_stream, e2e_tuned=e2e_tuned,
-                   e2e_sharded=e2e_sharded, accuracy=accuracy,
+                   e2e_sharded=e2e_sharded, e2e_slo=e2e_slo,
+                   accuracy=accuracy,
                    kernels_micro=kernels_micro, roofline=roofline)
     names = [n for arg in args.only for n in arg.split(",") if n] \
         if args.only else list(benches)

@@ -16,6 +16,15 @@ model replica per device, least-loaded dispatch, p50/p99 latency split):
 
     PYTHONPATH=src python -m repro.launch.serve --arch resnet8 \
         --replicas 2 --slack-ms 5 --deadline-ms 50 --requests 64 --batch 8
+
+Trace-driven SLO serving (repro.traffic: arrivals from a JSON trace or a
+seeded Poisson process, per-class deadlines/priorities/policies, optional
+autoscaling and accuracy-aware degradation to a cheaper variant):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch resnet20 \
+        --trace results/trace.json --slo-classes \
+        "interactive:25:0:strict,standard:50:1:degrade" \
+        --autoscale --replicas 2 --degrade-arch resnet8
 """
 from __future__ import annotations
 
@@ -87,6 +96,61 @@ def serve_resnet_sharded(args, cfg, qp, buckets):
           f"{[r['served'] for r in st['replicas']]}")
 
 
+def serve_resnet_traffic(args, cfg, qp, buckets):
+    """Trace-driven SLO serving via ``repro.traffic``: the live runner over
+    ``ShardedResNetEngine`` replicas, with per-class deadline accounting,
+    optional autoscaling, and overload degradation to ``--degrade-arch``."""
+    from repro.models import resnet as R
+    from repro.serve.engine import ShardedResNetEngine
+    from repro.traffic import (
+        Autoscaler, AutoscaleConfig, LiveTrafficRunner, OverloadRouter,
+        PoissonProcess, TraceReplay, parse_classes)
+    from repro.traffic.__main__ import print_report
+
+    classes = parse_classes(args.slo_classes)
+    if args.trace:
+        arrivals = TraceReplay.from_file(args.trace).generate(
+            n=args.requests or None)
+    else:
+        arrivals = PoissonProcess(
+            args.arrival_rate, seed=args.seed,
+            class_mix={c.name: 1.0 for c in classes}).generate(
+                n=args.requests)
+    n_dev = jax.local_device_count()
+    replicas = min(max(args.replicas, 1), n_dev)
+    variants = {args.arch: ShardedResNetEngine(
+        cfg, qp, batch=args.batch, backend=args.backend, replicas=replicas,
+        batch_sizes=buckets, slack_ms=args.slack_ms, tune=args.tune or None)}
+    if args.degrade_arch:
+        dcfg = {"resnet8": R.RESNET8, "resnet20": R.RESNET20}[
+            args.degrade_arch]
+        dparams = R.init_params(dcfg, jax.random.PRNGKey(args.seed + 1))
+        dqp = R.quantize_params(R.fold_params(dparams), dcfg)
+        variants[args.degrade_arch] = ShardedResNetEngine(
+            dcfg, dqp, batch=args.batch, backend=args.backend, replicas=1,
+            slack_ms=args.slack_ms)
+    for eng in variants.values():
+        eng.pool.warmup()
+    autoscaler = None
+    if args.autoscale:
+        autoscaler = Autoscaler(
+            AutoscaleConfig(min_replicas=1, max_replicas=replicas),
+            clock=variants[args.arch].clock)
+        variants[args.arch].set_active_replicas(autoscaler.active)
+    router = OverloadRouter(classes, primary=args.arch,
+                            degraded=args.degrade_arch or None)
+    rng = np.random.default_rng(args.seed)
+    images = rng.random((64, cfg.img, cfg.img, 3)).astype(np.float32)
+    runner = LiveTrafficRunner(variants, classes, router,
+                               autoscaler=autoscaler)
+    report = runner.run(arrivals, images)
+    print(f"served trace of {len(arrivals)} arrivals through "
+          f"{list(variants)} (replicas={replicas}, "
+          f"autoscale={'on' if autoscaler else 'off'})")
+    print_report(report)
+    return report
+
+
 def serve_resnet(args):
     from repro.models import resnet as R
     from repro.serve.engine import ImageRequest, ResNetEngine
@@ -96,6 +160,8 @@ def serve_resnet(args):
     qp = R.quantize_params(R.fold_params(params), cfg)
     buckets = tuple(int(b) for b in args.buckets.split(",")) if args.buckets \
         else (args.batch,)
+    if args.trace or args.slo_classes or args.autoscale:
+        return serve_resnet_traffic(args, cfg, qp, buckets)
     if args.replicas:
         return serve_resnet_sharded(args, cfg, qp, buckets)
     eng = ResNetEngine(cfg, qp, batch=args.batch, backend=args.backend,
@@ -155,6 +221,22 @@ def main():
                          "best-effort under --slack-ms only)")
     ap.add_argument("--seed", type=int, default=0,
                     help="resnet: RNG seed for the synthetic request images")
+    ap.add_argument("--trace", default="",
+                    help="resnet: serve a repro.traffic JSON trace file "
+                         "(engages the SLO-class serving path)")
+    ap.add_argument("--slo-classes", default="",
+                    help="resnet: SLO class spec "
+                         "name:deadline_ms:priority[:policy],... or a JSON "
+                         "file (engages the SLO-class serving path)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="resnet: autoscale the active replica set from "
+                         "queue depth + utilization (ceiling = --replicas)")
+    ap.add_argument("--degrade-arch", default="",
+                    help="resnet: cheaper variant that degrade-policy SLO "
+                         "classes fall back to under overload")
+    ap.add_argument("--arrival-rate", type=float, default=200.0,
+                    help="resnet: Poisson arrival rate (req/s) when serving "
+                         "SLO classes without a --trace file")
     ap.add_argument("--tune", default="",
                     choices=("", "auto", "analytic", "device"),
                     help="resnet: kernel autotuning — 'auto' serves from the "

@@ -23,4 +23,4 @@ from repro.quantize.export import (               # noqa: F401
     export_qparams, ptq_quantize, validate_export)
 from repro.quantize.evaluate import (             # noqa: F401
     calibration_batches, evaluate_compiled, evaluate_engine, evaluate_float,
-    load_eval_set, synthetic_eval_set)
+    evaluate_variants, load_eval_set, synthetic_eval_set)

@@ -175,6 +175,21 @@ def evaluate_compiled(cfg, qparams, images, labels, backend: str = "pallas",
     return out
 
 
+def evaluate_variants(variants, images, labels, backend: str = "lax-int",
+                      batch: int = 64, replicas=None) -> dict:
+    """Top-1 of several model variants on one shared eval set — the accuracy
+    references the traffic layer's graceful-degradation accounting
+    (``repro.traffic.degrade``) prices requests with.  ``variants`` maps a
+    variant name (e.g. ``"resnet20"``) to ``(cfg, qparams)``; every variant
+    is scored through the real serving engine via :func:`evaluate_compiled`,
+    so the numbers are serving-path numbers, not offline ones.  Returns
+    ``{name: top1}``."""
+    return {name: float(evaluate_compiled(
+        cfg, qp, images, labels, backend=backend, batch=batch,
+        replicas=replicas)["top1"])
+        for name, (cfg, qp) in variants.items()}
+
+
 def evaluate_float(cfg, params, images, labels, batch: int = 64,
                    forward=None) -> dict:
     """The float reference top-1 (``models.resnet.forward`` in eval mode, BN

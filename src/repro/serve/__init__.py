@@ -12,6 +12,6 @@
 from repro.serve.engine import (                         # noqa: F401
     Engine, ImageRequest, Request, ResNetEngine, ShardedResNetEngine)
 from repro.serve.sched import (                          # noqa: F401
-    Backpressure, BatchCoalescer, Dispatch, FakeClock, LatencyStats,
-    MonotonicClock, ReplicaPool, ReplicaState, ScheduledRequest, Scheduler,
-    SchedulerClosed, least_loaded)
+    Backpressure, BatchCoalescer, Dispatch, DrainResult, FakeClock,
+    LatencyStats, MonotonicClock, ReplicaPool, ReplicaState,
+    ScheduledRequest, Scheduler, SchedulerClosed, least_loaded)

@@ -427,6 +427,26 @@ class ShardedResNetEngine:
         through the normal dispatch path (graceful drain)."""
         self.sched.shutdown()
 
+    # -- autoscaling hooks --------------------------------------------------
+
+    @property
+    def active_replicas(self) -> int:
+        """Replicas currently receiving new dispatches (autoscaler-set)."""
+        return self.sched.active
+
+    def set_active_replicas(self, n: int) -> int:
+        """Actuate an autoscaling decision: route new dispatches to the
+        first ``n`` replicas only (clamped to the pool size).  Deactivated
+        replicas finish their in-flight work and keep their executables
+        warm, so scaling back up is instant."""
+        return self.sched.set_active(n)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted but not yet dispatched — the autoscaler's
+        primary pressure signal."""
+        return self.sched.pending
+
     # -- introspection ------------------------------------------------------
 
     def latency_stats(self) -> dict:

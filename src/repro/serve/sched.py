@@ -120,6 +120,20 @@ class Dispatch:
         return len(self.requests)
 
 
+class DrainResult(int):
+    """``Scheduler.drain``'s return value: still the flushed-dispatch count
+    (an ``int``, so every existing ``n == k`` consumer is untouched), plus
+    ``missed_deadline`` — how many of the drained *requests* had already
+    blown their deadline by the time the drain dispatched them.  Overload
+    experiments use the split to distinguish "served late" from "served in
+    time" in the tail that shutdown flushes."""
+
+    def __new__(cls, dispatches: int, missed_deadline: int = 0):
+        obj = super().__new__(cls, dispatches)
+        obj.missed_deadline = int(missed_deadline)
+        return obj
+
+
 class Backpressure(RuntimeError):
     """Raised by ``submit`` when the pending queue is at ``max_pending`` —
     the caller must retry later (``submit_async`` awaits instead)."""
@@ -230,7 +244,13 @@ def least_loaded(replicas: Sequence[ReplicaState]) -> ReplicaState:
 
 
 class LatencyStats:
-    """Per-request queue-wait and compute samples with percentile summary."""
+    """Per-request queue-wait and compute samples with percentile summary.
+
+    Samples are also bucketed by the request's ``priority`` class so SLO
+    layers (``repro.traffic.slo``) can report per-class percentiles and
+    deadline accounting; the flat top-level summary keys are unchanged —
+    existing consumers never see a different shape, only the additional
+    ``by_priority`` breakdown."""
 
     def __init__(self):
         self.queue_wait_s: List[float] = []
@@ -238,14 +258,25 @@ class LatencyStats:
         self.deadline_misses = 0
         self.deadline_total = 0
         self.failed = 0                   # requests whose dispatch errored
+        self._by_priority: dict = {}      # priority -> per-class sample store
+
+    def _class(self, priority: int) -> dict:
+        return self._by_priority.setdefault(
+            priority, dict(queue_wait_s=[], compute_s=[],
+                           deadline_misses=0, deadline_total=0))
 
     def record(self, sreq: ScheduledRequest) -> None:
         self.queue_wait_s.append(sreq.queue_wait)
         self.compute_s.append(sreq.compute_time)
+        cls = self._class(sreq.priority)
+        cls["queue_wait_s"].append(sreq.queue_wait)
+        cls["compute_s"].append(sreq.compute_time)
         if sreq.deadline is not None:
             self.deadline_total += 1
+            cls["deadline_total"] += 1
             if not sreq.deadline_met:
                 self.deadline_misses += 1
+                cls["deadline_misses"] += 1
 
     @staticmethod
     def _pct(xs: List[float]) -> dict:
@@ -256,13 +287,24 @@ class LatencyStats:
                     p99=float(np.percentile(a, 99)),
                     max=float(a.max()))
 
+    def priority_summary(self) -> dict:
+        """Per-priority-class breakdown: same keys as the flat summary,
+        keyed by the priority value (lower = more urgent)."""
+        return {p: dict(count=len(c["queue_wait_s"]),
+                        queue_wait_ms=self._pct(c["queue_wait_s"]),
+                        compute_ms=self._pct(c["compute_s"]),
+                        deadline_misses=c["deadline_misses"],
+                        deadline_total=c["deadline_total"])
+                for p, c in sorted(self._by_priority.items())}
+
     def summary(self) -> dict:
         return dict(count=len(self.queue_wait_s),
                     queue_wait_ms=self._pct(self.queue_wait_s),
                     compute_ms=self._pct(self.compute_s),
                     deadline_misses=self.deadline_misses,
                     deadline_total=self.deadline_total,
-                    failed=self.failed)
+                    failed=self.failed,
+                    by_priority=self.priority_summary())
 
 
 # ---------------------------------------------------------------------------
@@ -298,6 +340,12 @@ class Scheduler:
         self.stats = LatencyStats()
         self._seq = 0
         self._in_flight_reqs = 0
+        # dispatches go to the least-loaded replica among the first
+        # ``active`` — the autoscaling hook (repro.traffic.autoscale):
+        # shrinking never cancels in-flight work on a deactivated replica,
+        # it only stops routing new batches there
+        self.active = len(self.replicas)
+        self.drained_missed_deadline = 0
 
     # -- admission ----------------------------------------------------------
 
@@ -352,7 +400,7 @@ class Scheduler:
                 not self.coalescer.due(now, self.service_estimate_s):
             return None
         batch = self.coalescer.take()
-        rep = least_loaded(self.replicas)
+        rep = least_loaded(self.replicas[:self.active])
         for r in batch:
             r.dispatch_t = now
             r.replica = rep.index
@@ -363,6 +411,14 @@ class Scheduler:
 
     def next_due_at(self) -> Optional[float]:
         return self.coalescer.next_due_at(self.service_estimate_s)
+
+    def set_active(self, n: int) -> int:
+        """Restrict dispatch to the first ``n`` replicas (clamped to
+        ``[1, len(replicas)]``); returns the applied value.  The autoscaler's
+        actuation point — replicas beyond ``active`` keep their executables
+        warm and finish what they hold, they just stop receiving work."""
+        self.active = max(1, min(int(n), len(self.replicas)))
+        return self.active
 
     def complete(self, dispatch: Dispatch, now: Optional[float] = None,
                  failed: bool = False) -> None:
@@ -398,26 +454,36 @@ class Scheduler:
         through the normal poll/complete cycle."""
         self.closed = True
 
-    def drain(self, execute: Callable[[Dispatch], None]) -> int:
+    def drain(self, execute: Callable[[Dispatch], None]) -> DrainResult:
         """Graceful shutdown helper: close admission, then run every
         remaining dispatch through ``execute`` (which must call
-        ``complete``).  Returns the number of dispatches flushed."""
+        ``complete``).  Returns a :class:`DrainResult` — the number of
+        dispatches flushed (an ``int``, back-compatible) carrying
+        ``missed_deadline``: how many drained requests had already missed
+        their deadline at dispatch time (served late vs served in time)."""
         self.shutdown()
         n = 0
+        missed = 0
         while True:
             d = self.poll()
             if d is None:
                 break
+            missed += sum(1 for r in d.requests
+                          if r.deadline is not None
+                          and r.deadline < d.dispatch_t)
             execute(d)
             n += 1
-        return n
+        self.drained_missed_deadline += missed
+        return DrainResult(n, missed)
 
     def summary(self) -> dict:
         return dict(replicas=[dict(index=r.index, served=r.served,
                                    dispatched=r.dispatched,
                                    in_flight=r.in_flight, failed=r.failed)
                               for r in self.replicas],
+                    active_replicas=self.active,
                     service_estimate_ms=self.service_estimate_s * 1e3,
+                    drained_missed_deadline=self.drained_missed_deadline,
                     **self.stats.summary())
 
 

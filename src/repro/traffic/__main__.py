@@ -1,0 +1,293 @@
+"""CLI for the traffic subsystem.
+
+    # deterministic overload simulation (FakeClock, no real sleeping): a
+    # bursty trace against ResNet20 with ResNet8 as the degrade variant,
+    # autoscaling 1..4 replicas, accuracy cost accounted
+    PYTHONPATH=src python -m repro.traffic --arch resnet20 \
+        --degrade-arch resnet8 --pattern bursty --rate 2400 --duration 0.5 \
+        --fps-primary 800 --fps-degraded 3200 --autoscale --replicas 4 \
+        --eval-n 64 --seed 0 --json results/traffic.json
+
+    # replay a recorded trace file instead of generating one
+    PYTHONPATH=src python -m repro.traffic --arch resnet20 \
+        --trace results/trace.json --fps-primary 800
+
+    # live mode: the same control plane over real ShardedResNetEngine
+    # replicas on the wall clock
+    PYTHONPATH=src python -m repro.traffic --mode live --arch resnet8 \
+        --rate 200 --duration 1.0 --requests 64
+
+``--mode sim`` (default) runs the virtual-time simulator: service times come
+from a ServiceModel (``--fps-primary`` / ``--fps-degraded``, defaulting to
+the paper's Kria KV260 Table-3 FPS), logits from the real compiled model
+(``--backend``), and the whole run is deterministic per ``--seed``.  This is
+the CI ``traffic-smoke`` entry point.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.models import resnet as R
+from repro.traffic import (
+    Autoscaler, AutoscaleConfig, LiveTrafficRunner, OverloadRouter,
+    PAPER_FPS, ServiceModel, SimServer, TraceReplay, TrafficSim,
+    make_process, parse_classes, save_trace, variant_accuracies)
+from repro.serve.sched import FakeClock
+
+RESNET_CFGS = {"resnet8": R.RESNET8, "resnet20": R.RESNET20}
+
+
+def _quantized(arch: str, seed: int):
+    cfg = RESNET_CFGS[arch]
+    params = R.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, R.quantize_params(R.fold_params(params), cfg)
+
+
+def _class_mix(classes, spec: str):
+    if not spec:
+        return {c.name: 1.0 for c in classes}
+    mix = {}
+    for part in spec.split(","):
+        name, w = part.split("=")
+        mix[name.strip()] = float(w)
+    unknown = sorted(set(mix) - {c.name for c in classes})
+    if unknown:
+        raise SystemExit(f"--class-mix names undefined classes {unknown}")
+    return mix
+
+
+def _arrivals(args, classes):
+    if args.trace:
+        return TraceReplay.from_file(args.trace).generate(
+            horizon_s=args.duration or None, n=args.requests or None)
+    proc = make_process(args.pattern, args.rate, seed=args.seed,
+                        class_mix=_class_mix(classes, args.class_mix),
+                        period_s=args.period,
+                        burst_on_s=args.burst_on, burst_off_s=args.burst_off)
+    return proc.generate(horizon_s=args.duration,
+                         n=args.requests or None)
+
+
+def _eval_data(args):
+    """Eval images/labels + per-variant top-1 references through the
+    repro.quantize harness (None when --eval-n 0 / --no-model)."""
+    if args.no_model or args.eval_n <= 0:
+        return None, None, None
+    from repro.quantize import load_eval_set
+
+    images, labels, source = load_eval_set(args.eval_n, seed=args.seed)
+    variants = {args.arch: _quantized(args.arch, args.seed)}
+    if args.degrade_arch:
+        variants[args.degrade_arch] = _quantized(args.degrade_arch,
+                                                 args.seed + 1)
+    acc = variant_accuracies(variants, images, labels, backend=args.backend,
+                            batch=min(args.batch, len(images)))
+    print(f"variant top-1 on {len(images)} {source} images: "
+          f"{({k: round(v, 4) for k, v in acc.items()})}")
+    return images, labels, acc
+
+
+def run_sim(args, classes, arrivals):
+    clock = FakeClock()
+    images, labels, acc = _eval_data(args)
+    models = {}
+    if not args.no_model:
+        from repro.compile import compile_model
+
+        for arch in ([args.arch] + ([args.degrade_arch]
+                                    if args.degrade_arch else [])):
+            cfg, qp = _quantized(
+                arch, args.seed + (0 if arch == args.arch else 1))
+            models[arch] = compile_model(cfg, qp, backend=args.backend,
+                                         batch_sizes=(args.batch,))
+    autoscaler = None
+    active = args.replicas
+    if args.autoscale:
+        autoscaler = Autoscaler(AutoscaleConfig(
+            min_replicas=args.min_replicas, max_replicas=args.replicas,
+            cooldown_s=args.cooldown_ms * 1e-3), clock=clock)
+        active = autoscaler.active
+    servers = {args.arch: SimServer(
+        args.arch, ServiceModel.from_fps(
+            args.fps_primary or PAPER_FPS[args.arch]),
+        clock, replicas=args.replicas, max_batch=args.batch,
+        slack_ms=args.slack_ms, model=models.get(args.arch), active=active)}
+    if args.degrade_arch:
+        servers[args.degrade_arch] = SimServer(
+            args.degrade_arch, ServiceModel.from_fps(
+                args.fps_degraded or PAPER_FPS[args.degrade_arch]),
+            clock, replicas=args.degrade_replicas, max_batch=args.batch,
+            slack_ms=args.slack_ms, model=models.get(args.degrade_arch))
+    router = OverloadRouter(classes, primary=args.arch,
+                            degraded=args.degrade_arch or None,
+                            enabled=not args.no_degrade)
+    sim = TrafficSim(servers, classes, router, clock, autoscaler=autoscaler)
+    return sim.run(arrivals, images=images, labels=labels,
+                   accuracy_by_variant=acc)
+
+
+def run_live(args, classes, arrivals):
+    from repro.serve.engine import ShardedResNetEngine
+
+    images, labels, acc = _eval_data(args)
+    if images is None:
+        rng = np.random.default_rng(args.seed)
+        images = rng.random(
+            (64, RESNET_CFGS[args.arch].img, RESNET_CFGS[args.arch].img, 3)
+        ).astype(np.float32)
+    n_dev = jax.local_device_count()
+    variants = {}
+    for arch in ([args.arch] + ([args.degrade_arch]
+                                if args.degrade_arch else [])):
+        cfg, qp = _quantized(arch,
+                             args.seed + (0 if arch == args.arch else 1))
+        eng = ShardedResNetEngine(
+            cfg, qp, batch=args.batch, backend=args.backend,
+            replicas=min(args.replicas, n_dev), slack_ms=args.slack_ms)
+        eng.pool.warmup()
+        variants[arch] = eng
+    autoscaler = None
+    if args.autoscale:
+        autoscaler = Autoscaler(AutoscaleConfig(
+            min_replicas=args.min_replicas,
+            max_replicas=min(args.replicas, n_dev),
+            cooldown_s=args.cooldown_ms * 1e-3),
+            clock=variants[args.arch].clock)
+        variants[args.arch].set_active_replicas(autoscaler.active)
+    router = OverloadRouter(classes, primary=args.arch,
+                            degraded=args.degrade_arch or None,
+                            enabled=not args.no_degrade)
+    runner = LiveTrafficRunner(variants, classes, router,
+                               autoscaler=autoscaler)
+    return runner.run(arrivals, images, labels=labels,
+                      accuracy_by_variant=acc)
+
+
+def print_report(report: dict) -> None:
+    print(f"\n-- traffic report ({report['duration_s']:.3f}s served time) --")
+    for name, c in report["classes"].items():
+        print(f"  class {name:<12} submitted={c['submitted']:<5} "
+              f"served={c['count']:<5} degraded={c['degraded']:<4} "
+              f"dropped={c['dropped']:<4} hit-rate={c['deadline_hit_rate']:.3f} "
+              f"wait p50/p99 ms={c['queue_wait_ms']['p50']:.2f}/"
+              f"{c['queue_wait_ms']['p99']:.2f}")
+    t = report["totals"]
+    print(f"  totals: {t['submitted']} submitted, {t['served']} served, "
+          f"{t['degraded']} degraded, {t['dropped']} dropped, "
+          f"hit-rate {t['deadline_hit_rate']:.3f}, "
+          f"by variant {t['served_by_variant']}")
+    if "autoscaler" in report:
+        a = report["autoscaler"]
+        print(f"  autoscaler: {a['scale_events']} scale events, "
+              f"final active={a['active']}")
+        for d in a["decisions"]:
+            print(f"    t={d['t']:.3f}s {d['from_replicas']}->"
+                  f"{d['to_replicas']} ({d['reason']})")
+    if "accuracy" in report:
+        a = report["accuracy"]
+        print(f"  accuracy: effective={a['effective_top1']:.4f} "
+              f"primary={a['primary_top1']:.4f} cost={a['accuracy_cost']:.4f}")
+    if "measured_accuracy" in report:
+        m = report["measured_accuracy"]
+        print(f"  measured effective top-1: {m['effective_top1']:.4f} "
+              f"({m['correct']}/{m['scored']} scored correct)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.traffic",
+        description="trace-driven load generation, SLO classes, autoscaling "
+                    "and accuracy-aware graceful degradation")
+    ap.add_argument("--mode", choices=("sim", "live"), default="sim")
+    ap.add_argument("--arch", default="resnet20", choices=sorted(RESNET_CFGS),
+                    help="primary (full-accuracy) model")
+    ap.add_argument("--degrade-arch", default="resnet8",
+                    help="cheaper variant for degrade-policy classes "
+                         "('' disables the variant entirely)")
+    ap.add_argument("--backend", default="lax-int")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=4,
+                    help="primary replica pool size (autoscale ceiling)")
+    ap.add_argument("--degrade-replicas", type=int, default=1)
+    ap.add_argument("--slack-ms", type=float, default=2.0)
+    # traffic shape
+    ap.add_argument("--trace", default="", help="replay this JSON trace")
+    ap.add_argument("--save-trace", default="",
+                    help="write the generated arrivals to this JSON file")
+    ap.add_argument("--pattern", default="bursty",
+                    choices=("poisson", "bursty", "diurnal"))
+    ap.add_argument("--rate", type=float, default=2400.0,
+                    help="mean arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=0.5,
+                    help="trace horizon in seconds")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="cap on generated/replayed arrivals (0 = horizon "
+                         "only)")
+    ap.add_argument("--burst-on", type=float, default=0.05)
+    ap.add_argument("--burst-off", type=float, default=0.05)
+    ap.add_argument("--period", type=float, default=10.0,
+                    help="diurnal pattern period (s)")
+    ap.add_argument("--class-mix", default="",
+                    help="per-class arrival weights, e.g. "
+                         "'interactive=1,standard=2,bulk=1' (default "
+                         "uniform)")
+    ap.add_argument("--slo-classes", dest="classes", default="",
+                    help="inline name:deadline_ms:priority[:policy] spec or "
+                         "a JSON file (default: the three-tier mix)")
+    # policies
+    ap.add_argument("--autoscale", action="store_true")
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--cooldown-ms", type=float, default=50.0)
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="disable overload degradation/shedding (A/B arm)")
+    # sim service model
+    ap.add_argument("--fps-primary", type=float, default=0.0,
+                    help="sim: primary per-replica FPS (default: paper "
+                         "Table 3 Kria KV260)")
+    ap.add_argument("--fps-degraded", type=float, default=0.0)
+    # accuracy accounting
+    ap.add_argument("--eval-n", type=int, default=64,
+                    help="eval-set size for the per-variant top-1 "
+                         "references (0 disables accuracy accounting)")
+    ap.add_argument("--no-model", action="store_true",
+                    help="sim: pure queueing simulation, no compiled model")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="", help="write the report here")
+    args = ap.parse_args(argv)
+    if args.degrade_arch and args.degrade_arch not in RESNET_CFGS:
+        ap.error(f"--degrade-arch must be one of {sorted(RESNET_CFGS)} "
+                 f"or ''")
+    if args.degrade_arch == args.arch:
+        args.degrade_arch = ""
+
+    classes = parse_classes(args.classes)
+    arrivals = _arrivals(args, classes)
+    print(f"{len(arrivals)} arrivals over "
+          f"{arrivals[-1].t if arrivals else 0:.3f}s "
+          f"({args.trace or args.pattern}, seed={args.seed})")
+    if args.save_trace:
+        save_trace(args.save_trace, arrivals,
+                   meta=dict(pattern=args.pattern, rate=args.rate,
+                             seed=args.seed))
+        print(f"wrote trace to {args.save_trace}")
+
+    report = (run_sim if args.mode == "sim" else run_live)(
+        args, classes, arrivals)
+    report["mode"] = args.mode
+    report["seed"] = args.seed
+    print_report(report)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"wrote report to {args.json}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""repro.traffic: loadgen determinism, SLO accounting, autoscaling policy,
+overload routing, and the virtual-time simulator.
+
+The two acceptance pins of the subsystem live here:
+
+* under a seeded bursty overload, enabling degradation *strictly* improves
+  the degrade-policy class's deadline-hit-rate vs the disabled A/B arm, with
+  the accuracy cost quantified in the report; and
+* with one replica and no overload, the simulator serving a real compiled
+  model produces logits bit-exact with ``ShardedResNetEngine`` serving the
+  same images — the control plane never touches the arithmetic.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import resnet as R
+from repro.serve import DrainResult, FakeClock, ImageRequest, \
+    ShardedResNetEngine
+from repro.serve import sched as S
+from repro.traffic import (
+    DEFAULT_CLASSES, DROP, Arrival, AutoscaleConfig, Autoscaler,
+    DiurnalProcess, OnOffProcess, OverloadRouter, PoissonProcess,
+    ServerSignals, ServiceModel, SimServer, SLOClass, TraceReplay,
+    TrafficSim, effective_accuracy, load_trace, make_process, parse_classes,
+    save_trace)
+
+MIX = {"interactive": 0.25, "standard": 0.5, "bulk": 0.25}
+
+
+# ---------------------------------------------------------------------------
+# loadgen — determinism + trace round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pattern", ["poisson", "bursty", "diurnal"])
+def test_generators_deterministic_per_seed(pattern):
+    a = make_process(pattern, 500.0, seed=7, class_mix=MIX,
+                     period_s=0.2).generate(horizon_s=0.25)
+    b = make_process(pattern, 500.0, seed=7, class_mix=MIX,
+                     period_s=0.2).generate(horizon_s=0.25)
+    c = make_process(pattern, 500.0, seed=8, class_mix=MIX,
+                     period_s=0.2).generate(horizon_s=0.25)
+    assert a and a == b                      # same seed -> identical sequence
+    assert a != c                            # different seed -> different
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    assert {x.slo for x in a} <= set(MIX)
+
+
+def test_generate_bounds():
+    p = PoissonProcess(1000.0, seed=0, class_mix=MIX)
+    assert len(p.generate(n=32)) == 32
+    with pytest.raises(ValueError):
+        p.generate()                         # unbounded
+    assert all(a.t < 0.05 for a in p.generate(horizon_s=0.05))
+
+
+def test_onoff_concentrates_rate():
+    # same mean rate, but the ON-window instantaneous rate is ~2x
+    bursty = OnOffProcess(2000.0, mean_on_s=0.05, mean_off_s=0.05, seed=1,
+                          class_mix=MIX).generate(horizon_s=1.0)
+    gaps = np.diff([a.t for a in bursty])
+    assert np.min(gaps) < 1.0 / 1500.0       # inside a burst: ~1/2000s gaps
+    assert np.max(gaps) > 0.01               # an OFF period shows up
+
+
+def test_diurnal_validates():
+    with pytest.raises(ValueError):
+        DiurnalProcess(500.0, 100.0)         # base > peak
+
+
+def test_trace_roundtrip(tmp_path):
+    arrivals = PoissonProcess(800.0, seed=3, class_mix=MIX).generate(n=64)
+    path = str(tmp_path / "trace.json")
+    save_trace(path, arrivals, meta={"pattern": "poisson", "seed": 3})
+    assert load_trace(path) == arrivals
+    assert TraceReplay.from_file(path).generate(n=10) == arrivals[:10]
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == 1 and doc["meta"]["pattern"] == "poisson"
+
+
+def test_arrival_dict_roundtrip():
+    a = Arrival(t=0.125, slo="standard", source=2)
+    assert Arrival.from_dict(a.to_dict()) == a
+
+
+# ---------------------------------------------------------------------------
+# slo — class parsing + accounting
+# ---------------------------------------------------------------------------
+
+
+def test_parse_classes_inline_and_default():
+    assert parse_classes(None) == list(DEFAULT_CLASSES)
+    got = parse_classes("gold:10:0:strict,best_effort:100:3:drop")
+    assert got == [SLOClass("gold", 10.0, 0, "strict"),
+                   SLOClass("best_effort", 100.0, 3, "drop")]
+    with pytest.raises(ValueError):
+        parse_classes("dup:10:0,dup:20:1")
+    with pytest.raises(ValueError):
+        parse_classes("nofields")
+
+
+def test_parse_classes_json_file(tmp_path):
+    path = tmp_path / "classes.json"
+    path.write_text(json.dumps([c.to_dict() for c in DEFAULT_CLASSES]))
+    assert parse_classes(str(path)) == list(DEFAULT_CLASSES)
+
+
+def test_slo_class_validation():
+    with pytest.raises(ValueError):
+        SLOClass("x", deadline_ms=0.0, priority=0)
+    with pytest.raises(ValueError):
+        SLOClass("x", deadline_ms=10.0, priority=0, policy="retry")
+
+
+# ---------------------------------------------------------------------------
+# serve.sched extensions (per-priority stats, DrainResult, set_active)
+# ---------------------------------------------------------------------------
+
+
+def _run_through(sched, n, priority=0, deadline_in=None, advance=0.0):
+    clock = sched.clock
+    reqs = [sched.submit(i, priority=priority, deadline_in=deadline_in)
+            for i in range(n)]
+    if advance:
+        clock.advance(advance)
+    while sched.pending:
+        d = sched.poll(sched.clock.now())
+        if d is None:
+            clock.advance(1.0)
+            continue
+        sched.complete(d)
+    return reqs
+
+
+def test_latency_stats_by_priority_breakdown():
+    clock = FakeClock()
+    sched = S.Scheduler(1, max_batch=4, slack_s=0.0, clock=clock)
+    _run_through(sched, 3, priority=0, deadline_in=10.0)
+    _run_through(sched, 2, priority=2, deadline_in=10.0)
+    summ = sched.stats.summary()
+    # flat keys unchanged for existing consumers
+    assert summ["count"] == 5 and summ["deadline_total"] == 5
+    assert set(summ) >= {"count", "queue_wait_ms", "compute_ms",
+                         "deadline_misses", "deadline_total", "failed"}
+    by = summ["by_priority"]
+    assert set(by) == {0, 2}
+    assert by[0]["count"] == 3 and by[2]["count"] == 2
+    assert by[2]["deadline_total"] == 2 and by[2]["deadline_misses"] == 0
+
+
+def test_drain_result_reports_missed_deadlines():
+    clock = FakeClock()
+    sched = S.Scheduler(1, max_batch=2, slack_s=50.0, clock=clock)
+    sched.submit("late", deadline_in=0.5)
+    sched.submit("fine", deadline_in=100.0)
+    clock.advance(1.0)                       # first deadline now in the past
+    done = []
+    res = sched.drain(lambda d: (done.append(len(d)), sched.complete(d)))
+    assert isinstance(res, int) and res == len(done)   # back-compat int
+    assert isinstance(res, DrainResult)
+    assert res.missed_deadline == 1
+    assert sched.summary()["drained_missed_deadline"] == 1
+
+
+def test_set_active_restricts_dispatch_prefix():
+    clock = FakeClock()
+    sched = S.Scheduler(3, max_batch=1, slack_s=0.0, clock=clock)
+    assert sched.set_active(1) == 1
+    for i in range(4):
+        sched.submit(i)
+        d = sched.poll(clock.now())
+        assert d.replica.index == 0          # only the active prefix serves
+        sched.complete(d)
+    assert sched.set_active(99) == 3         # clamped to the pool
+    assert sched.set_active(0) == 1
+    assert sched.summary()["active_replicas"] == 1
+
+
+# ---------------------------------------------------------------------------
+# autoscale — hysteresis + cooldown under FakeClock
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_scales_up_on_sustained_util():
+    clock = FakeClock()
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, cooldown_s=0.1),
+                   clock=clock)
+    # EWMA smoothing: one busy sample is not enough to cross high_util
+    assert a.observe(busy=1, queue_depth=0) == 1
+    assert a.observe(busy=1, queue_depth=0) == 1
+    clock.advance(0.2)
+    assert a.observe(busy=1, queue_depth=0) == 2       # sustained -> up
+    assert a.decisions[-1].reason == "util-high"
+
+
+def test_autoscaler_queue_pressure_scales_up_immediately():
+    clock = FakeClock()
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, queue_high=2.0),
+                   clock=clock)
+    assert a.observe(busy=0, queue_depth=16, slots_per_replica=8) == 2
+    assert a.decisions[-1].reason == "queue"
+
+
+def test_autoscaler_cooldown_blocks_consecutive_actions():
+    clock = FakeClock()
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, cooldown_s=0.25),
+                   clock=clock)
+    assert a.observe(busy=0, queue_depth=99, slots_per_replica=1) == 2
+    clock.advance(0.1)                       # still inside the cooldown
+    assert a.observe(busy=2, queue_depth=99, slots_per_replica=1) == 2
+    clock.advance(0.25)
+    assert a.observe(busy=2, queue_depth=99, slots_per_replica=1) == 3
+    assert len(a.decisions) == 2
+
+
+def test_autoscaler_hysteresis_dead_band_and_scale_down():
+    clock = FakeClock()
+    a = Autoscaler(AutoscaleConfig(max_replicas=4, cooldown_s=0.0,
+                                   high_util=0.75, low_util=0.25),
+                   clock=clock, active=2)
+    assert a.observe(busy=1, queue_depth=0) == 2       # util 0.5: dead band
+    # low utilization but a non-empty queue must NOT scale down
+    for _ in range(8):
+        assert a.observe(busy=0, queue_depth=3) == 2
+    # empty queue + low util -> down, clamped at min_replicas
+    assert a.observe(busy=0, queue_depth=0) == 1
+    assert a.decisions[-1].reason == "util-low"
+    for _ in range(4):
+        assert a.observe(busy=0, queue_depth=0) == 1
+
+
+def test_autoscale_config_validation():
+    with pytest.raises(ValueError):
+        AutoscaleConfig(min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError):
+        AutoscaleConfig(low_util=0.8, high_util=0.5)
+
+
+# ---------------------------------------------------------------------------
+# degrade — routing policy + accuracy accounting
+# ---------------------------------------------------------------------------
+
+BUSY = ServerSignals(outstanding=300, active=1, max_batch=8,
+                     service_estimate_s=0.01)    # ~0.38s predicted: blows
+                                                 # every DEFAULT_CLASSES
+                                                 # deadline (max 200ms)
+FREE = ServerSignals(outstanding=0, active=1, max_batch=8,
+                     service_estimate_s=0.001)
+COLD = ServerSignals(outstanding=100, active=1, max_batch=8,
+                     service_estimate_s=0.0)
+
+
+def _router(enabled=True):
+    return OverloadRouter(DEFAULT_CLASSES, primary="big", degraded="small",
+                          enabled=enabled)
+
+
+def test_router_not_overloaded_goes_primary():
+    r = _router()
+    for name in ("interactive", "standard", "bulk"):
+        d = r.route(name, {"big": FREE, "small": FREE})
+        assert d.target == "big" and not d.degraded and not d.dropped
+
+
+def test_router_cold_estimate_never_overloads():
+    d = _router().route("standard", {"big": COLD, "small": FREE})
+    assert d.target == "big" and not d.overloaded
+
+
+def test_router_overload_policies():
+    r = _router()
+    strict = r.route("interactive", {"big": BUSY, "small": FREE})
+    assert strict.target == "big" and strict.overloaded \
+        and not strict.degraded                      # strict never degrades
+    deg = r.route("standard", {"big": BUSY, "small": FREE})
+    assert deg.target == "small" and deg.degraded
+    drop = r.route("bulk", {"big": BUSY, "small": FREE})
+    assert drop.target == DROP and drop.dropped
+
+
+def test_router_wont_degrade_into_a_swamped_variant():
+    d = _router().route("standard", {"big": BUSY, "small": BUSY})
+    assert d.target == "big" and not d.degraded      # same lateness, better
+    d = _router(enabled=False).route("standard", {"big": BUSY, "small": FREE})
+    assert d.target == "big" and not d.degraded      # A/B arm: policy off
+
+
+def test_effective_accuracy_accounts_drops():
+    out = effective_accuracy({"a": 2, "b": 2}, dropped=4,
+                             accuracy_by_variant={"a": 0.8, "b": 0.6},
+                             primary="a")
+    assert out["effective_top1"] == pytest.approx(0.35)
+    assert out["accuracy_cost"] == pytest.approx(0.45)
+    with pytest.raises(ValueError):
+        effective_accuracy({"c": 1}, 0, {"a": 0.8}, "a")
+
+
+# ---------------------------------------------------------------------------
+# the virtual-time simulator — acceptance pins
+# ---------------------------------------------------------------------------
+
+
+def _overload_sim(enabled, autoscale=False, replicas=1):
+    clock = FakeClock()
+    servers = {
+        "resnet20": SimServer("resnet20", ServiceModel.from_fps(800.0),
+                              clock, replicas=replicas, max_batch=8,
+                              active=1 if autoscale else None),
+        "resnet8": SimServer("resnet8", ServiceModel.from_fps(3200.0),
+                             clock, replicas=1, max_batch=8)}
+    router = OverloadRouter(DEFAULT_CLASSES, primary="resnet20",
+                            degraded="resnet8", enabled=enabled)
+    scaler = Autoscaler(AutoscaleConfig(max_replicas=replicas,
+                                        cooldown_s=0.02),
+                        clock=clock) if autoscale else None
+    sim = TrafficSim(servers, DEFAULT_CLASSES, router, clock,
+                     autoscaler=scaler)
+    arrivals = make_process("bursty", 2400.0, seed=3, class_mix=MIX,
+                            burst_on_s=0.05, burst_off_s=0.05
+                            ).generate(horizon_s=0.3)
+    report = sim.run(arrivals, accuracy_by_variant={"resnet20": 0.913,
+                                                    "resnet8": 0.887})
+    return sim, report
+
+
+def test_degradation_strictly_improves_low_priority_hit_rate():
+    _, off = _overload_sim(enabled=False)
+    _, on = _overload_sim(enabled=True)
+    # identical seeded arrivals, the router flag is the only difference
+    assert on["totals"]["submitted"] == off["totals"]["submitted"]
+    assert on["classes"]["standard"]["deadline_hit_rate"] > \
+        off["classes"]["standard"]["deadline_hit_rate"]
+    assert on["totals"]["degraded"] > 0
+    # the accuracy cost of the policy is quantified, not hand-waved
+    acc = on["accuracy"]
+    assert acc["effective_top1"] < acc["primary_top1"]
+    assert acc["accuracy_cost"] == pytest.approx(
+        acc["primary_top1"] - acc["effective_top1"])
+    assert off["accuracy"]["accuracy_cost"] == 0.0
+    assert off["totals"]["degraded"] == off["totals"]["dropped"] == 0
+    json.dumps(on)                           # the report is a JSON document
+
+
+def test_high_priority_class_is_never_degraded_or_dropped():
+    sim, on = _overload_sim(enabled=True)
+    cls = on["classes"]["interactive"]
+    assert cls["degraded"] == 0 and cls["dropped"] == 0
+    assert all(r.variant == "resnet20" for r in sim.requests
+               if r.slo == "interactive" and r.done)
+
+
+def test_autoscaler_reacts_in_sim():
+    _, rep = _overload_sim(enabled=False, autoscale=True, replicas=4)
+    auto = rep["autoscaler"]
+    assert auto["scale_events"] >= 1
+    assert auto["decisions"][0]["from_replicas"] == 1
+    assert all(1 <= d["to_replicas"] <= 4 for d in auto["decisions"])
+    # more capacity than the fixed 1-replica arm -> strictly better totals
+    _, fixed = _overload_sim(enabled=False, replicas=1)
+    assert rep["totals"]["deadline_hit_rate"] > \
+        fixed["totals"]["deadline_hit_rate"]
+
+
+def test_sim_rejects_unknown_classes():
+    clock = FakeClock()
+    server = SimServer("m", ServiceModel.from_fps(1000.0), clock)
+    sim = TrafficSim({"m": server}, DEFAULT_CLASSES,
+                     OverloadRouter(DEFAULT_CLASSES, primary="m"), clock)
+    with pytest.raises(ValueError):
+        sim.run([Arrival(t=0.0, slo="nonexistent")])
+
+
+def test_sim_logits_bit_exact_with_sharded_engine():
+    """One replica, no overload: the simulator serving a real compiled model
+    must produce logits bit-exact with ShardedResNetEngine on the same
+    images — the traffic control plane cannot perturb the arithmetic."""
+    from repro.compile import compile_model
+
+    cfg = R.RESNET8
+    params = R.init_params(cfg, jax.random.PRNGKey(0))
+    qp = R.quantize_params(R.fold_params(params), cfg)
+    batch, n = 4, 12
+    rng = np.random.default_rng(0)
+    images = rng.random((n, cfg.img, cfg.img, 3)).astype(np.float32)
+
+    cm = compile_model(cfg, qp, backend="lax-int", batch_sizes=(batch,))
+    classes = [SLOClass("standard", deadline_ms=1000.0, priority=1,
+                        policy="degrade")]
+    clock = FakeClock()
+    server = SimServer("resnet8", ServiceModel.from_fps(30153.0), clock,
+                       replicas=1, max_batch=batch, model=cm)
+    sim = TrafficSim({"resnet8": server}, classes,
+                     OverloadRouter(classes, primary="resnet8"), clock)
+    arrivals = PoissonProcess(100.0, seed=1,
+                              class_mix={"standard": 1.0}).generate(n=n)
+    rep = sim.run(arrivals, images=images, labels=np.zeros(n, np.int64))
+    assert rep["totals"]["served"] == n
+    assert rep["totals"]["dropped"] == rep["totals"]["degraded"] == 0
+    assert all(r.done and r.logits is not None for r in sim.requests)
+
+    eng = ShardedResNetEngine(cfg, qp, batch=batch, backend="lax-int",
+                              replicas=1)
+    assert eng.active_replicas == 1 and eng.queue_depth == 0
+    assert eng.set_active_replicas(99) == 1            # clamped to the pool
+    reqs = [ImageRequest(rid=i, image=images[i]) for i in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for i, r in enumerate(reqs):
+        assert np.array_equal(np.asarray(r.logits),
+                              np.asarray(sim.requests[i].logits)), \
+            f"request {i}: sim logits diverge from the engine"
