@@ -11,10 +11,13 @@ accumulating silently.  Three classes of check, strictest first:
   1. **Correctness flags** — any boolean derived value (``bit_exact``,
      ``exact``…) that was true in the baseline must stay true.  Machine
      independent: zero tolerance.
-  2. **Deterministic science** — non-:data:`~benchmarks.run.VOLATILE`
-     derived values (modeled HBM bytes, chain partitions, input digests,
-     top-1 accuracies) are pure functions of (code, seed); any drift is a
-     real behaviour change and fails unless ``--no-strict-derived``.
+  2. **Deterministic science** — derived values that are not
+     :func:`~benchmarks.run.is_volatile` (modeled HBM bytes, chain
+     partitions, input digests, top-1 accuracies) are pure functions of
+     (code, seed); any drift is a real behaviour change and fails unless
+     ``--no-strict-derived``.  Wall-derived keys follow the naming
+     contract (``obs_*``, ``*_wall_{s,us,ms}``, or the legacy VOLATILE
+     set) and are exempt.
   3. **Wall-clock** — FPS-like keys must not drop by more than
      ``--fps-drop`` and latency-like values (``us_per_call``) must not rise
      by more than ``--latency-rise``, both *relative* thresholds so the gate
@@ -36,7 +39,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.run import VOLATILE, run_digest  # noqa: E402
+from benchmarks.run import is_volatile, run_digest  # noqa: E402
 
 # wall-clock derived keys where HIGHER is better (checked via --fps-drop);
 # every other volatile numeric is treated as informational noise.
@@ -93,7 +96,7 @@ def compare_runs(base: dict, new: dict, fps_drop: float = 0.2,
                     flag(name, "fps",
                          f"{k}: {bv:g} -> {nv:g} "
                          f"({nv / bv - 1:+.1%} < -{fps_drop:.0%})")
-            elif k not in VOLATILE and strict_derived and nv != bv:
+            elif not is_volatile(k) and strict_derived and nv != bv:
                 flag(name, "derived-drift", f"{k}: {bv!r} -> {nv!r}")
         bus, nus = b.get("us_per_call", 0), n.get("us_per_call", 0)
         if bus and bus > 0 and nus > bus * (1.0 + latency_rise):

@@ -28,6 +28,7 @@ Properties:
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, Sequence, Union
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 from repro.compile import lowering
 from repro.compile.backends import Backend, get_backend
 from repro.compile.params import QResNetParams, ensure_typed
+from repro.obs import runtime as _obs
 
 
 def _donate_argnums():
@@ -81,8 +83,37 @@ class CompiledModel:
     def _staged(self, images):
         # runs at trace time only; the count is the retrace detector
         bs = images.shape[0]
-        self.trace_counts[bs] = self.trace_counts.get(bs, 0) + 1
+        n = self.trace_counts[bs] = self.trace_counts.get(bs, 0) + 1
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "compile_traces_total", "per-bucket trace events").inc(
+                    bucket=str(bs), backend=self.backend.name)
+            if n > 1:
+                # a bucket tracing twice means an executable was rebuilt —
+                # the regression the AOT bucket discipline exists to prevent
+                ob.metrics.counter(
+                    "compile_retraces_total",
+                    "per-bucket retraces (should stay 0 in serving)").inc(
+                        bucket=str(bs), backend=self.backend.name)
+                ob.trace.instant("retrace", cat="compile", track="compile",
+                                 bucket=bs, backend=self.backend.name)
         return self._forward(images)
+
+    def _note_compile(self, kind: str, bucket: int, wall_s: float) -> None:
+        """Record one XLA compile in the active obs session.  The event
+        timestamp is in the session's clock domain (deterministic under
+        FakeClock); the measured compile time travels as the volatile
+        ``wall_us`` arg."""
+        ob = _obs.active()
+        if ob is None:
+            return
+        ob.trace.instant("compile", cat="compile", track="compile",
+                         kind=kind, bucket=bucket, backend=self.backend.name,
+                         wall_us=round(wall_s * 1e6, 1))
+        ob.metrics.counter(
+            "compile_executables_total", "AOT executables built").inc(
+                kind=kind, bucket=str(bucket), backend=self.backend.name)
 
     def input_spec(self, batch: int, sharding=None) -> jax.ShapeDtypeStruct:
         """THE input-shape contract of every executable this model compiles
@@ -98,9 +129,11 @@ class CompiledModel:
             raise ValueError(
                 f"batch {batch} is not a compiled bucket {self.batch_sizes}")
         if batch not in self._execs:
+            t0 = time.perf_counter()
             jitted = jax.jit(self._staged, donate_argnums=_donate_argnums())
             self._execs[batch] = jitted.lower(self.input_spec(batch)).compile()
             self.compile_count += 1
+            self._note_compile("default", batch, time.perf_counter() - t0)
         return self._execs[batch]
 
     def warmup(self) -> "CompiledModel":
@@ -125,11 +158,13 @@ class CompiledModel:
                 f"batch {batch} is not a compiled bucket {self.batch_sizes}")
         key = (int(batch), device)
         if key not in self._dev_execs:
+            t0 = time.perf_counter()
             jitted = jax.jit(self._staged, donate_argnums=_donate_argnums())
             spec = self.input_spec(
                 batch, sharding=jax.sharding.SingleDeviceSharding(device))
             self._dev_execs[key] = jitted.lower(spec).compile()
             self.compile_count += 1
+            self._note_compile("device", batch, time.perf_counter() - t0)
         return self._dev_execs[key]
 
     def run_placed(self, images, device) -> jnp.ndarray:
@@ -185,10 +220,12 @@ class CompiledModel:
             smapped = shard_map(self._shard_lowered[lkey], mesh=mesh,
                                 in_specs=P(axis), out_specs=P(axis),
                                 check_vma=False)
+            t0 = time.perf_counter()
             spec = self.input_spec(
                 batch, sharding=NamedSharding(mesh, P(axis)))
             self._shard_execs[key] = jax.jit(smapped).lower(spec).compile()
             self.compile_count += 1
+            self._note_compile("shard", batch, time.perf_counter() - t0)
         return self._shard_execs[key]
 
     def run_sharded(self, images, mesh, axis: str = "data") -> jnp.ndarray:
@@ -244,6 +281,20 @@ class CompiledModel:
             images = jnp.concatenate(
                 [images, jnp.zeros((bucket - n,) + images.shape[1:],
                                    images.dtype)], axis=0)
+        ob = _obs.active()
+        if ob is not None:
+            # counters only on the hot path — executions dispatch async, so
+            # a wall-timed span here would measure dispatch, not compute
+            # (the scheduler's per-request compute span covers that)
+            ob.metrics.counter(
+                "model_runs_total", "bucket executions dispatched").inc(
+                    bucket=str(bucket), backend=self.backend.name)
+            if n < bucket:
+                ob.metrics.counter(
+                    "model_pad_rows_total",
+                    "zero-pad rows added by bucket rounding").inc(
+                        bucket - n, bucket=str(bucket),
+                        backend=self.backend.name)
         return run_bucket(images, bucket, n < bucket)[:n]
 
     def __call__(self, images) -> jnp.ndarray:

@@ -153,17 +153,35 @@ def serve_resnet_traffic(args, cfg, qp, buckets):
 
 def serve_resnet(args):
     from repro.models import resnet as R
-    from repro.serve.engine import ImageRequest, ResNetEngine
 
     cfg = {"resnet8": R.RESNET8, "resnet20": R.RESNET20}[args.arch]
     params = R.init_params(cfg, jax.random.PRNGKey(0))
     qp = R.quantize_params(R.fold_params(params), cfg)
     buckets = tuple(int(b) for b in args.buckets.split(",")) if args.buckets \
         else (args.batch,)
-    if args.trace or args.slo_classes or args.autoscale:
-        return serve_resnet_traffic(args, cfg, qp, buckets)
-    if args.replicas:
-        return serve_resnet_sharded(args, cfg, qp, buckets)
+    ob = None
+    if args.trace_out or args.metrics_out:
+        from repro import obs as _o
+        ob = _o.instrument()     # engines run on the same monotonic domain
+    try:
+        if args.trace or args.slo_classes or args.autoscale:
+            return serve_resnet_traffic(args, cfg, qp, buckets)
+        if args.replicas:
+            return serve_resnet_sharded(args, cfg, qp, buckets)
+        return _serve_resnet_single(args, cfg, qp, buckets)
+    finally:
+        if ob is not None:
+            from repro import obs as _o
+            written = _o.export(ob, trace_out=args.trace_out or None,
+                                metrics_out=args.metrics_out or None)
+            _o.disable()
+            for kind, path in sorted(written.items()):
+                print(f"wrote {kind} to {path}")
+
+
+def _serve_resnet_single(args, cfg, qp, buckets):
+    from repro.serve.engine import ImageRequest, ResNetEngine
+
     eng = ResNetEngine(cfg, qp, batch=args.batch, backend=args.backend,
                        batch_sizes=buckets,
                        ab_backends=tuple(
@@ -237,6 +255,12 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=200.0,
                     help="resnet: Poisson arrival rate (req/s) when serving "
                          "SLO classes without a --trace file")
+    ap.add_argument("--trace-out", default="",
+                    help="resnet: write a Chrome trace_event JSON of the "
+                         "serving run (repro.obs; load in Perfetto)")
+    ap.add_argument("--metrics-out", default="",
+                    help="resnet: write Prometheus-style metrics text "
+                         "(repro.obs)")
     ap.add_argument("--tune", default="",
                     choices=("", "auto", "analytic", "device"),
                     help="resnet: kernel autotuning — 'auto' serves from the "

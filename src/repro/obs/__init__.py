@@ -1,0 +1,40 @@
+"""``repro.obs`` — zero-dependency observability for the serving stack.
+
+Three pieces, one switch:
+
+* :mod:`repro.obs.metrics` — labelled counters/gauges/histograms with
+  deterministic snapshot + Prometheus text exposition (stdlib only).
+* :mod:`repro.obs.trace`  — span tracing on the injected clock domain,
+  exported as Chrome ``trace_event`` JSON (Perfetto) or JSONL.
+* :mod:`repro.obs.profile` — per-task kernel wall timing paired with the
+  modeled HBM/VMEM bytes from ``core.dataflow`` (lazy-imports jax).
+
+Nothing records unless :func:`instrument` has installed a session — every
+call site in ``serve``/``compile``/``tune``/``traffic`` checks
+``obs.active()`` first, so the disabled cost is one global read.  See
+docs/observability.md for the span taxonomy and metric names.
+"""
+from repro.obs.metrics import (                        # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, DEFAULT_BUCKETS)
+from repro.obs.trace import (                          # noqa: F401
+    Trace, TraceEvent, VOLATILE_ARGS, VOLATILE_CATS, strip_volatile_events)
+from repro.obs.runtime import (                        # noqa: F401
+    Observability, active, install, instrument, disable, instrumented,
+    export)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
+    "Trace", "TraceEvent", "VOLATILE_ARGS", "VOLATILE_CATS",
+    "strip_volatile_events",
+    "Observability", "active", "install", "instrument", "disable",
+    "instrumented", "export",
+    # lazy (imports jax): profile_tasks, TaskProfile, REFERENCE_HBM_GBPS
+]
+
+
+def __getattr__(name):
+    # keep `import repro.obs` jax-free: the profiler loads on first use
+    if name in ("profile_tasks", "TaskProfile", "REFERENCE_HBM_GBPS"):
+        from repro.obs import profile as _p
+        return getattr(_p, name)
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

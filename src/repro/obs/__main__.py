@@ -1,0 +1,137 @@
+"""``python -m repro.obs`` — render a text report from exported artifacts.
+
+Reads the files the instrumented CLIs write (``--trace-out`` Chrome
+``trace_event`` JSON, ``--metrics-out`` Prometheus text) and prints a
+summary: event/track counts, the top-N slowest spans, kernel-profile rows
+with their measured-vs-roofline ratios, and the metric series.  CI's
+obs-smoke step runs this against the artifacts it just produced — a parse
+failure fails the build, so the export formats cannot drift silently.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.obs.metrics import parse_text
+
+
+def load_chrome_trace(path: str) -> List[dict]:
+    """Load + validate a Chrome trace_event file; returns the event list.
+    Raises ``ValueError`` on anything Perfetto would reject outright."""
+    with open(path) as f:
+        obj = json.load(f)
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError(f"{path}: not a Chrome trace_event object "
+                         "(missing 'traceEvents')")
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: 'traceEvents' is not a list")
+    for i, e in enumerate(events):
+        if not isinstance(e, dict) or "ph" not in e:
+            raise ValueError(f"{path}: event {i} has no phase: {e!r}")
+        if e["ph"] in ("X", "i") and "ts" not in e:
+            raise ValueError(f"{path}: event {i} has no timestamp: {e!r}")
+    return events
+
+
+def _track_names(events: List[dict]) -> dict:
+    names = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            names[e.get("tid")] = e.get("args", {}).get("name", "?")
+    return names
+
+
+def report_trace(events: List[dict], top: int = 10) -> str:
+    tracks = _track_names(events)
+    spans = [e for e in events if e.get("ph") == "X"]
+    instants = [e for e in events if e.get("ph") == "i"]
+    lines = [f"trace: {len(spans)} spans, {len(instants)} instants, "
+             f"{len(tracks)} tracks"]
+    by_track: dict = {}
+    for e in spans:
+        row = by_track.setdefault(e.get("tid"), [0, 0.0])
+        row[0] += 1
+        row[1] += e.get("dur", 0.0)
+    for tid in sorted(by_track, key=lambda t: -by_track[t][1]):
+        n, total = by_track[tid]
+        lines.append(f"  {tracks.get(tid, tid):<12} {n:>6} spans  "
+                     f"{total / 1e3:>10.3f} ms total")
+    slow = sorted(spans, key=lambda e: -e.get("dur", 0.0))[:top]
+    if slow:
+        lines.append(f"top {len(slow)} slowest spans:")
+        for e in slow:
+            args = e.get("args") or {}
+            extra = " ".join(f"{k}={args[k]}" for k in sorted(args)
+                             if k in ("seq", "batch", "replica", "bucket",
+                                      "reason", "kind"))
+            lines.append(f"  {e.get('dur', 0.0) / 1e3:>10.3f} ms  "
+                         f"{tracks.get(e.get('tid'), '?'):<12} "
+                         f"{e.get('name')}  {extra}".rstrip())
+    kernels = [e for e in spans if e.get("cat") == "kernel"]
+    if kernels:
+        lines.append("kernel profiles (measured vs modeled roofline):")
+        for e in kernels:
+            a = e.get("args") or {}
+            lines.append(
+                f"  {e.get('name'):<24} wall {a.get('wall_us', 0.0):>12.1f} us"
+                f"  hbm {a.get('hbm_modeled_bytes', 0):>10} B"
+                f"  {a.get('gbps', 0.0):>8.4f} GB/s"
+                f"  {a.get('vs_roofline', 0.0):>8.1f}x roofline")
+    return "\n".join(lines)
+
+
+def report_metrics(parsed: dict, max_series: int = 40) -> str:
+    n_series = sum(len(s) for s in parsed.values())
+    lines = [f"metrics: {len(parsed)} metrics, {n_series} series"]
+    shown = 0
+    for name in sorted(parsed):
+        for series, value in sorted(parsed[name].items()):
+            if shown >= max_series:
+                lines.append(f"  ... ({n_series - shown} more series)")
+                return "\n".join(lines)
+            lines.append(f"  {name}{series} = "
+                         f"{int(value) if value == int(value) else value}")
+            shown += 1
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize exported observability artifacts.")
+    ap.add_argument("--trace", help="Chrome trace_event JSON (--trace-out)")
+    ap.add_argument("--metrics", help="Prometheus text file (--metrics-out)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="slowest spans to list (default 10)")
+    ap.add_argument("--json", dest="json_out",
+                    help="also write the parsed summary as JSON")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to report: pass --trace and/or --metrics")
+
+    summary = {}
+    try:
+        if args.trace:
+            events = load_chrome_trace(args.trace)
+            print(report_trace(events, top=args.top))
+            summary["trace_events"] = len(events)
+        if args.metrics:
+            with open(args.metrics) as f:
+                parsed = parse_text(f.read())
+            print(report_metrics(parsed))
+            summary["metrics"] = len(parsed)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

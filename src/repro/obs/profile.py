@@ -1,0 +1,259 @@
+"""Per-task kernel profiling: measured wall time vs modeled HBM/VMEM bytes.
+
+The paper's evaluation is a per-layer accounting (buffer bytes, DSP/BRAM,
+latency per conv task — Tables 3–4); the TPU analogue here times each
+lowered task's kernel — the ``conv_stem`` call, every ``resblock_fused``
+block, or each ``block_chain`` megakernel — and pairs the measurement with
+the *modeled* HBM/VMEM traffic from ``core.dataflow`` (the same formulas
+``repro.tune``'s analytic cost model searches over).  Every profile row
+carries:
+
+* ``wall_us``       — best-of-``reps`` measured kernel wall time (volatile);
+* ``hbm_bytes`` / ``vmem_bytes`` — modeled traffic/footprint (deterministic);
+* ``gbps``          — achieved HBM bandwidth implied by the two;
+* ``vs_roofline``   — measured time over the memory-bound lower bound at
+  ``REFERENCE_HBM_GBPS``: 1.0 is roofline-perfect, larger is slower.
+  In interpret mode (CPU) expect very large ratios — the number is for
+  *relative* attribution across tasks, not an absolute hardware claim.
+
+This module is the only part of ``repro.obs`` that imports jax / the
+compile stack, and only lazily — the core (metrics/trace/runtime) stays
+stdlib-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+__all__ = ["TaskProfile", "profile_tasks", "REFERENCE_HBM_GBPS"]
+
+# Reference memory bandwidth for the roofline denominator.  Arbitrary but
+# fixed: ~the DDR4 envelope of the paper's largest board class, so ratios
+# are comparable across runs and tasks.  docs/observability.md explains how
+# to read the ratio.
+REFERENCE_HBM_GBPS = 25.6
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskProfile:
+    """One profiled task: measured wall time + modeled bytes."""
+
+    task: str                 # "stem", "b3", "stem+b0+b1" (chain)
+    kind: str                 # "stem" | "block" | "chain"
+    batch: int
+    batch_tile: int
+    wall_us: float            # volatile (wall measurement)
+    hbm_bytes: int            # modeled, deterministic
+    vmem_bytes: int           # modeled, deterministic
+
+    @property
+    def gbps(self) -> float:
+        if self.wall_us <= 0:
+            return 0.0
+        return self.hbm_bytes / (self.wall_us * 1e-6) / 1e9
+
+    @property
+    def vs_roofline(self) -> float:
+        """Measured / memory-bound-lower-bound at REFERENCE_HBM_GBPS."""
+        bound_us = self.hbm_bytes / (REFERENCE_HBM_GBPS * 1e9) * 1e6
+        if bound_us <= 0:
+            return 0.0
+        return self.wall_us / bound_us
+
+    def to_dict(self) -> dict:
+        return dict(task=self.task, kind=self.kind, batch=self.batch,
+                    batch_tile=self.batch_tile, wall_us=self.wall_us,
+                    hbm_bytes=self.hbm_bytes, vmem_bytes=self.vmem_bytes,
+                    gbps=self.gbps, vs_roofline=self.vs_roofline)
+
+
+def _time_op(fn, reps: int) -> float:
+    """Best-of-``reps`` wall seconds; one unmeasured warmup call pays the
+    trace+compile."""
+    import jax
+
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _attach(ob, cfg_name: str, tp: TaskProfile) -> None:
+    """Record a profile into an observability session: a ``cat="kernel"``
+    span (ts from the session clock — deterministic; dur is the wall
+    measurement — volatile, zeroed by strip_volatile exports) plus
+    deterministic modeled-bytes gauges.  Wall-derived numbers stay OUT of
+    the metrics registry so ``--metrics-out`` files remain byte-stable."""
+    t0 = ob.now()
+    ob.trace.span(f"{cfg_name}/{tp.task}", cat="kernel", track="kernels",
+                  t0=t0, t1=t0 + tp.wall_us * 1e-6,
+                  kind=tp.kind, batch=tp.batch, batch_tile=tp.batch_tile,
+                  hbm_modeled_bytes=tp.hbm_bytes,
+                  vmem_modeled_bytes=tp.vmem_bytes,
+                  wall_us=round(tp.wall_us, 3),
+                  gbps=round(tp.gbps, 4),
+                  vs_roofline=round(tp.vs_roofline, 2))
+    ob.metrics.counter(
+        "kernel_profiles_total", "profiled kernel tasks").inc(
+            kind=tp.kind, model=cfg_name)
+    ob.metrics.gauge(
+        "kernel_hbm_modeled_bytes",
+        "modeled HBM traffic per task (core.dataflow)").set(
+            tp.hbm_bytes, task=tp.task, model=cfg_name)
+    ob.metrics.gauge(
+        "kernel_vmem_modeled_bytes",
+        "modeled VMEM footprint per task (core.dataflow)").set(
+            tp.vmem_bytes, task=tp.task, model=cfg_name)
+    ob.profiles.append(tp)
+
+
+def profile_tasks(cfg, qparams, backend: str = "pallas", batch: int = 4,
+                  reps: int = 2, seed: int = 0,
+                  ob=None) -> List[TaskProfile]:
+    """Profile every lowered task of ``cfg`` under ``backend``.
+
+    ``backend="pallas"`` profiles the per-block pipeline (one ``conv_stem``
+    + one ``resblock_fused`` per block); ``backend="pallas-stream"``
+    profiles the chain megakernels of the default chain partition (with the
+    same singleton fallback as the backend).  Inputs are seeded uint8
+    activations with the real quantized weights, so the kernels execute the
+    production arithmetic.  When ``ob`` is given, every profile is attached
+    to its trace/metrics (see :func:`_attach`).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dataflow
+    from repro.compile import lowering
+    from repro.compile.params import activation_out_specs, ensure_typed
+    from repro.models.resnet import A_SPEC
+
+    if backend not in ("pallas", "pallas-stream"):
+        raise ValueError(
+            f"profile_tasks supports the kernel backends "
+            f"('pallas', 'pallas-stream'), not {backend!r}")
+
+    params = ensure_typed(qparams)
+    g = lowering.optimized_graph(cfg)
+    plan = lowering.plan_model(g, params)
+    stem_out, block_outs = activation_out_specs(params, A_SPEC)
+    shapes = dataflow.resnet_block_shapes(cfg.blocks_per_stage,
+                                          cfg.base_width, cfg.img)
+    stem_layer = dataflow.resnet_layers(cfg.blocks_per_stage, cfg.base_width,
+                                        cfg.img)[0]
+    rng = np.random.default_rng(seed)
+
+    def u8(*shape):
+        return jnp.asarray(rng.integers(0, 256, size=shape, dtype=np.uint8))
+
+    def tile(config) -> int:
+        return config.batch_tile if config is not None else 1
+
+    st = params.stem
+    stem_shift = stem_out.exp - st.product_exp
+    out: List[TaskProfile] = []
+
+    def profile_stem():
+        from repro.kernels.conv_stem.ops import conv_stem_op
+
+        x = u8(batch, cfg.img, cfg.img, 3)
+        wall = _time_op(
+            lambda: conv_stem_op(x, st.wq, st.bq, shift=stem_shift,
+                                 config=plan.stem.config), reps)
+        bt = tile(plan.stem.config)
+        cb = plan.stem.config.cout_block if plan.stem.config else 0
+        out.append(TaskProfile(
+            task="stem", kind="stem", batch=batch, batch_tile=bt,
+            wall_us=wall * 1e6,
+            hbm_bytes=dataflow.conv_task_hbm_bytes(stem_layer, batch, bt),
+            vmem_bytes=dataflow.conv_task_vmem_bytes(stem_layer, bt, cb)))
+
+    def profile_block(task):
+        from repro.kernels.resblock_fused.ops import resblock_fused_op
+
+        blk = params.blocks[task.index]
+        shp = shapes[task.index]
+        sh = blk.shifts_for(block_outs[task.index].exp)
+        wd = blk.ds.wq if task.has_ds else None
+        bd = blk.ds.bq.astype(jnp.int32) if task.has_ds else None
+        x = u8(batch, shp.h, shp.w, shp.ich)
+        wall = _time_op(
+            lambda: resblock_fused_op(
+                x, blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
+                blk.conv1.wq, blk.conv1.bq.astype(jnp.int32),
+                wd, bd, stride=task.stride, config=task.config, **sh), reps)
+        bt = tile(task.config)
+        out.append(TaskProfile(
+            task=f"b{task.index}", kind="block", batch=batch, batch_tile=bt,
+            wall_us=wall * 1e6,
+            hbm_bytes=dataflow.resblock_task_hbm_bytes(
+                shp.h, shp.w, shp.ich, shp.och, batch, bt,
+                downsample=task.has_ds, stride=task.stride),
+            vmem_bytes=dataflow.resblock_task_vmem_bytes(
+                shp.h, shp.w, shp.ich, shp.och, bt,
+                downsample=task.has_ds, stride=task.stride)))
+
+    def profile_chain(chain):
+        from repro.kernels.megakernel.megakernel import ChainBlockSpec
+        from repro.kernels.megakernel.ops import block_chain_op
+        from repro.tune import space as tspace
+
+        # mirror PallasStreamBackend's untuned-chain config choice
+        cshapes = [shapes[t.index] for t in chain.blocks]
+        stem_och = cfg.base_width if chain.stem is not None else 0
+        config = chain.config
+        if config is None:
+            legal = tspace.chain_space(cshapes, batch, stem_och=stem_och,
+                                       vmem_budget=tspace.VMEM_BUDGET)
+            config = max(legal, key=lambda c: c.batch_tile) if legal else None
+        ops, specs = [], []
+        for task in chain.blocks:
+            blk = params.blocks[task.index]
+            sh = blk.shifts_for(block_outs[task.index].exp)
+            ws = [blk.conv0.wq, blk.conv0.bq.astype(jnp.int32),
+                  blk.conv1.wq, blk.conv1.bq.astype(jnp.int32)]
+            if task.has_ds:
+                ws += [blk.ds.wq, blk.ds.bq.astype(jnp.int32)]
+            ops.append(tuple(ws))
+            specs.append(ChainBlockSpec(stride=task.stride,
+                                        has_ds=task.has_ds, **sh))
+        first = cshapes[0]
+        ich0 = 3 if stem_och else first.ich
+        x = u8(batch, first.h, first.w, ich0)
+        stem = (st.wq, st.bq.astype(jnp.int32)) if stem_och else None
+        wall = _time_op(
+            lambda: block_chain_op(
+                x, tuple(ops), specs=tuple(specs), stem=stem,
+                stem_shift=stem_shift if stem_och else None,
+                config=config), reps)
+        bt = tile(config)
+        out.append(TaskProfile(
+            task=chain.describe(), kind="chain", batch=batch, batch_tile=bt,
+            wall_us=wall * 1e6,
+            hbm_bytes=dataflow.chain_task_hbm_bytes(
+                cshapes, batch, bt, stem_och=stem_och),
+            vmem_bytes=dataflow.chain_task_vmem_bytes(
+                cshapes, bt, stem_och=stem_och)))
+
+    if backend == "pallas":
+        profile_stem()
+        for task in plan.blocks:
+            profile_block(task)
+    else:
+        chains = lowering.plan_chains(plan, cfg)
+        if not chains or chains[0].stem is None:
+            profile_stem()
+        for chain in chains:
+            if len(chain.blocks) == 1 and chain.stem is None:
+                profile_block(chain.blocks[0])   # backend's singleton fallback
+            else:
+                profile_chain(chain)
+
+    if ob is not None:
+        for tp in out:
+            _attach(ob, cfg.name, tp)
+    return out

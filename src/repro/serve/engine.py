@@ -434,12 +434,13 @@ class ShardedResNetEngine:
         """Replicas currently receiving new dispatches (autoscaler-set)."""
         return self.sched.active
 
-    def set_active_replicas(self, n: int) -> int:
+    def set_active_replicas(self, n: int, reason: str = None) -> int:
         """Actuate an autoscaling decision: route new dispatches to the
         first ``n`` replicas only (clamped to the pool size).  Deactivated
         replicas finish their in-flight work and keep their executables
-        warm, so scaling back up is instant."""
-        return self.sched.set_active(n)
+        warm, so scaling back up is instant.  ``reason`` (the policy
+        trigger) is recorded on the scheduler's scale-event accounting."""
+        return self.sched.set_active(n, reason=reason)
 
     @property
     def queue_depth(self) -> int:

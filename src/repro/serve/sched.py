@@ -33,6 +33,8 @@ from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import runtime as _obs
+
 
 # ---------------------------------------------------------------------------
 # Clocks — injectable time source so scheduling is simulable
@@ -346,6 +348,10 @@ class Scheduler:
         # it only stops routing new batches there
         self.active = len(self.replicas)
         self.drained_missed_deadline = 0
+        # autoscaler actuation record, surfaced by summary() so scale
+        # activity is reachable from every CLI/benchmark JSON
+        self.scale_events = 0
+        self.last_scale_reason: Optional[str] = None
 
     # -- admission ----------------------------------------------------------
 
@@ -360,6 +366,11 @@ class Scheduler:
             raise SchedulerClosed("scheduler is shut down; draining only")
         if self.max_pending is not None and \
                 len(self.coalescer) >= self.max_pending:
+            ob = _obs.active()
+            if ob is not None:
+                ob.metrics.counter(
+                    "sched_backpressure_total",
+                    "submits rejected at max_pending").inc()
             raise Backpressure(
                 f"pending queue at max_pending={self.max_pending}")
         now = self.clock.now()
@@ -371,6 +382,11 @@ class Scheduler:
                                 deadline=deadline, priority=priority)
         self._seq += 1
         self.coalescer.add(sreq)
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "sched_submitted_total", "requests admitted").inc(
+                    priority=str(priority))
         return sreq
 
     # -- dispatch -----------------------------------------------------------
@@ -407,17 +423,52 @@ class Scheduler:
         rep.in_flight += len(batch)
         rep.dispatched += len(batch)
         self._in_flight_reqs += len(batch)
+        ob = _obs.active()
+        if ob is not None:
+            first = min(r.arrival for r in batch)
+            ob.trace.span("coalesce_hold", cat="sched", track="coalesce",
+                          t0=first, t1=now, batch=len(batch),
+                          replica=rep.index)
+            ob.metrics.counter(
+                "sched_dispatches_total", "micro-batches dispatched").inc(
+                    replica=str(rep.index))
+            ob.metrics.histogram(
+                "sched_coalesce_hold_ms",
+                "oldest-request hold time per dispatched batch").observe(
+                    (now - first) * 1e3)
         return Dispatch(requests=batch, replica=rep, dispatch_t=now)
 
     def next_due_at(self) -> Optional[float]:
         return self.coalescer.next_due_at(self.service_estimate_s)
 
-    def set_active(self, n: int) -> int:
+    def set_active(self, n: int, reason: Optional[str] = None) -> int:
         """Restrict dispatch to the first ``n`` replicas (clamped to
         ``[1, len(replicas)]``); returns the applied value.  The autoscaler's
         actuation point — replicas beyond ``active`` keep their executables
-        warm and finish what they hold, they just stop receiving work."""
-        self.active = max(1, min(int(n), len(self.replicas)))
+        warm and finish what they hold, they just stop receiving work.
+
+        An actual change counts as a scale event (``scale_events`` /
+        ``last_scale_reason``, surfaced by :meth:`summary`); ``reason`` is
+        the caller's policy trigger (the autoscaler passes its
+        ``ScaleDecision.reason``)."""
+        applied = max(1, min(int(n), len(self.replicas)))
+        if applied != self.active:
+            prev, self.active = self.active, applied
+            self.scale_events += 1
+            if reason is not None:
+                self.last_scale_reason = reason
+            ob = _obs.active()
+            if ob is not None:
+                ob.trace.instant("scale", cat="control", track="control",
+                                 from_replicas=prev, to_replicas=applied,
+                                 reason=reason)
+                ob.metrics.counter(
+                    "sched_scale_events_total",
+                    "applied active-replica changes").inc(
+                        reason=str(reason))
+                ob.metrics.gauge(
+                    "sched_active_replicas",
+                    "replicas currently receiving work").set(applied)
         return self.active
 
     def complete(self, dispatch: Dispatch, now: Optional[float] = None,
@@ -432,14 +483,49 @@ class Scheduler:
         rep = dispatch.replica
         rep.in_flight -= len(dispatch)
         self._in_flight_reqs -= len(dispatch)
+        ob = _obs.active()
         if failed:
             rep.failed += len(dispatch)
             self.stats.failed += len(dispatch)
+            if ob is not None:
+                ob.metrics.counter(
+                    "sched_failed_total",
+                    "requests whose dispatch errored").inc(
+                        len(dispatch), replica=str(rep.index))
             return
         for r in dispatch.requests:
             r.complete_t = now
             self.stats.record(r)
         rep.served += len(dispatch)
+        if ob is not None:
+            ob.trace.span("batch", cat="sched", track=f"replica{rep.index}",
+                          t0=dispatch.dispatch_t, t1=now, n=len(dispatch))
+            for r in dispatch.requests:
+                ob.trace.span("queue_wait", cat="sched", track="requests",
+                              t0=r.arrival, t1=r.dispatch_t, seq=r.seq,
+                              priority=r.priority, replica=rep.index)
+                ob.trace.span("compute", cat="sched", track="requests",
+                              t0=r.dispatch_t, t1=now, seq=r.seq,
+                              priority=r.priority, replica=rep.index,
+                              **({} if r.deadline is None
+                                 else dict(deadline_met=bool(r.deadline_met))))
+                ob.metrics.histogram(
+                    "sched_queue_wait_ms",
+                    "admit-to-dispatch wait per request").observe(
+                        r.queue_wait * 1e3, priority=str(r.priority))
+                ob.metrics.histogram(
+                    "sched_compute_ms",
+                    "dispatch-to-complete time per request").observe(
+                        r.compute_time * 1e3, priority=str(r.priority))
+                if r.deadline is not None:
+                    ob.metrics.counter(
+                        "sched_deadline_total",
+                        "deadline-carrying completions by outcome").inc(
+                            outcome="met" if r.deadline_met else "missed",
+                            priority=str(r.priority))
+            ob.metrics.counter(
+                "sched_served_total", "requests completed").inc(
+                    len(dispatch), replica=str(rep.index))
         observed = now - dispatch.dispatch_t
         if self.service_estimate_s <= 0.0:
             self.service_estimate_s = observed
@@ -474,6 +560,13 @@ class Scheduler:
             execute(d)
             n += 1
         self.drained_missed_deadline += missed
+        ob = _obs.active()
+        if ob is not None:
+            ob.trace.instant("drain", cat="sched", track="control",
+                             dispatches=n, missed_deadline=missed)
+            ob.metrics.counter(
+                "sched_drained_dispatches_total",
+                "dispatches flushed by drain()").inc(n)
         return DrainResult(n, missed)
 
     def summary(self) -> dict:
@@ -484,6 +577,8 @@ class Scheduler:
                     active_replicas=self.active,
                     service_estimate_ms=self.service_estimate_s * 1e3,
                     drained_missed_deadline=self.drained_missed_deadline,
+                    scale_events=self.scale_events,
+                    last_scale_reason=self.last_scale_reason,
                     **self.stats.summary())
 
 

@@ -94,6 +94,11 @@ def _eval_data(args):
 
 def run_sim(args, classes, arrivals):
     clock = FakeClock()
+    from repro.obs import runtime as _obsrt
+    if _obsrt.active() is not None:
+        # bind the obs session to the sim's virtual clock: every span and
+        # metric then lives in deterministic FakeClock time
+        _obsrt.active().set_clock(clock)
     images, labels, acc = _eval_data(args)
     models = {}
     if not args.no_model:
@@ -203,6 +208,10 @@ def main(argv=None):
         prog="python -m repro.traffic",
         description="trace-driven load generation, SLO classes, autoscaling "
                     "and accuracy-aware graceful degradation")
+    ap.add_argument("mode_pos", nargs="?", choices=("sim", "live"),
+                    metavar="mode",
+                    help="positional alias for --mode: "
+                         "`python -m repro.traffic sim ...`")
     ap.add_argument("--mode", choices=("sim", "live"), default="sim")
     ap.add_argument("--arch", default="resnet20", choices=sorted(RESNET_CFGS),
                     help="primary (full-accuracy) model")
@@ -258,7 +267,23 @@ def main(argv=None):
                     help="sim: pure queueing simulation, no compiled model")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="", help="write the report here")
+    # observability (repro.obs; see docs/observability.md)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace_event JSON (Perfetto-loadable)"
+                         " of the run here")
+    ap.add_argument("--jsonl-out", default="",
+                    help="write the JSONL event log here")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus-style metrics text here")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="skip the per-task kernel profiling pass that "
+                         "--trace-out runs after the traffic run")
+    ap.add_argument("--profile-backend", default="pallas",
+                    choices=("pallas", "pallas-stream"),
+                    help="kernel pipeline the profiling pass times")
     args = ap.parse_args(argv)
+    if args.mode_pos:
+        args.mode = args.mode_pos
     if args.degrade_arch and args.degrade_arch not in RESNET_CFGS:
         ap.error(f"--degrade-arch must be one of {sorted(RESNET_CFGS)} "
                  f"or ''")
@@ -276,10 +301,35 @@ def main(argv=None):
                              seed=args.seed))
         print(f"wrote trace to {args.save_trace}")
 
+    ob = None
+    if args.trace_out or args.metrics_out or args.jsonl_out:
+        from repro import obs as _o
+        ob = _o.instrument()     # run_sim re-binds to its FakeClock
+
     report = (run_sim if args.mode == "sim" else run_live)(
         args, classes, arrivals)
     report["mode"] = args.mode
     report["seed"] = args.seed
+
+    if ob is not None:
+        from repro import obs as _o
+        if args.trace_out and not args.no_model and not args.no_profile:
+            # per-task kernel profiles ride along in the same trace: wall
+            # timings on the production kernels + modeled HBM/VMEM bytes
+            from repro.obs.profile import profile_tasks
+            cfg, qp = _quantized(args.arch, args.seed)
+            profile_tasks(cfg, qp, backend=args.profile_backend,
+                          batch=args.batch, reps=1, seed=args.seed, ob=ob)
+        written = _o.export(ob, trace_out=args.trace_out or None,
+                            metrics_out=args.metrics_out or None,
+                            jsonl_out=args.jsonl_out or None)
+        _o.disable()
+        report["obs"] = dict(trace=ob.trace.summary(),
+                             profiles=[p.to_dict() for p in ob.profiles],
+                             written=written)
+        for kind, path in sorted(written.items()):
+            print(f"wrote {kind} to {path}")
+
     print_report(report)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
+from repro.obs import runtime as _obs
 from repro.serve import sched as S
 
 
@@ -111,9 +112,24 @@ class Autoscaler:
                 t=now, from_replicas=self.active, to_replicas=target,
                 reason=reason, util_ewma=round(self.util_ewma, 6),
                 queue_depth=queue_depth))
+            ob = _obs.active()
+            if ob is not None:
+                ob.metrics.counter(
+                    "autoscale_decisions_total",
+                    "policy decisions by trigger").inc(reason=reason)
+                ob.trace.instant("autoscale", cat="control", track="control",
+                                 t=now, from_replicas=self.active,
+                                 to_replicas=target, reason=reason,
+                                 queue_depth=queue_depth)
             self.active = target
             self._last_change_t = now
         return self.active
+
+    @property
+    def last_reason(self) -> Optional[str]:
+        """The most recent decision's trigger (None before any decision) —
+        what the actuation call passes to ``set_active(reason=...)``."""
+        return self.decisions[-1].reason if self.decisions else None
 
     def _cooled(self, now: float) -> bool:
         return self._last_change_t is None or \
@@ -123,4 +139,5 @@ class Autoscaler:
         return dict(active=self.active,
                     util_ewma=round(self.util_ewma, 6),
                     scale_events=len(self.decisions),
+                    last_reason=self.last_reason,
                     decisions=[d.to_dict() for d in self.decisions])

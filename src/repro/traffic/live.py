@@ -82,7 +82,8 @@ class LiveTrafficRunner:
                    if r.in_flight > 0)
         self.autoscaler.observe(busy, eng.queue_depth,
                                 slots_per_replica=eng.batch)
-        eng.set_active_replicas(self.autoscaler.active)
+        eng.set_active_replicas(self.autoscaler.active,
+                                reason=self.autoscaler.last_reason)
 
     def run(self, arrivals: List[Arrival], images, labels=None,
             accuracy_by_variant: Optional[Dict[str, float]] = None) -> dict:

@@ -255,7 +255,8 @@ class TrafficSim:
                 self.autoscaler.observe(
                     prim.busy(now), prim.sched.pending,
                     slots_per_replica=prim.sched.coalescer.max_batch)
-                prim.sched.set_active(self.autoscaler.active)
+                prim.sched.set_active(self.autoscaler.active,
+                                      reason=self.autoscaler.last_reason)
                 next_scale = now + self.scale_interval_s
         else:
             raise RuntimeError(

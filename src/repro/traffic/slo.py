@@ -24,6 +24,7 @@ import json
 import os
 from typing import Dict, Iterable, List, Optional
 
+from repro.obs import runtime as _obs
 from repro.serve import sched as S
 
 POLICIES = ("strict", "degrade", "drop")
@@ -148,9 +149,18 @@ class SLOAccounting:
 
     def record_submit(self, name: str) -> None:
         self.stats[name].submitted += 1
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "slo_submitted_total", "requests submitted by class").inc(
+                    cls=name)
 
     def record_drop(self, name: str) -> None:
         self.stats[name].dropped += 1
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "slo_dropped_total", "requests shed by class").inc(cls=name)
 
     def record_served(self, name: str, sreq: S.ScheduledRequest,
                       variant: str, degraded: bool = False) -> None:
@@ -160,6 +170,18 @@ class SLOAccounting:
             cls.degraded += 1
         self.served_by_variant[variant] = \
             self.served_by_variant.get(variant, 0) + 1
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "slo_served_total", "requests served by class and variant"
+            ).inc(cls=name, variant=variant,
+                  degraded=str(bool(degraded)).lower())
+            if sreq.deadline is not None:
+                ob.metrics.counter(
+                    "slo_deadline_total",
+                    "per-class deadline outcomes").inc(
+                        cls=name,
+                        outcome="met" if sreq.deadline_met else "missed")
 
     def totals(self) -> dict:
         submitted = sum(c.submitted for c in self.stats.values())

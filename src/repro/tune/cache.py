@@ -22,6 +22,7 @@ import os
 import tempfile
 from typing import Dict, Optional
 
+from repro.obs import runtime as _obs
 from repro.tune.config import KernelConfig
 
 DEFAULT_CACHE = "~/.cache/repro/tune.json"
@@ -79,9 +80,19 @@ class TuneCache:
                 out = None
             if out is not None:
                 self.hits += 1
+                self._count("hit")
                 return out
         self.misses += 1
+        self._count("miss")
         return None
+
+    @staticmethod
+    def _count(result: str) -> None:
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "tune_cache_total", "tuning-cache lookups by result").inc(
+                    result=result)
 
     def put(self, key: str, tuning: Dict[str, KernelConfig]) -> None:
         self._data[key] = {task: c.to_dict() for task, c in tuning.items()}

@@ -165,3 +165,52 @@ def test_cli_exit_codes(tmp_path, snap):
                           capture_output=True, text=True)
     assert fail.returncode == 1
     assert "REGRESSION" in fail.stdout
+
+
+# ---- the volatile-key naming contract (repro.obs timing keys) -------------
+
+def test_is_volatile_pattern():
+    """Wall-derived keys are recognized by pattern, not enumeration: the
+    legacy VOLATILE set, any obs_* measurement, and any *_wall_{s,us,ms}
+    suffix.  Deterministic keys (modeled bytes, digests, counts) are not."""
+    from benchmarks.run import is_volatile
+    assert is_volatile("fps") and is_volatile("wall_s")      # legacy set
+    assert is_volatile("obs_overhead_frac")
+    assert is_volatile("obs_fps")
+    assert is_volatile("profile_wall_us")
+    assert is_volatile("drain_wall_ms")
+    assert not is_volatile("hbm_saved_B")
+    assert not is_volatile("bit_identical")
+    assert not is_volatile("runs_counted")
+    assert not is_volatile("inputs")
+    # "wallpaper" must not be swept up by the suffix rule
+    assert not is_volatile("wallpaper")
+
+
+def test_obs_timing_keys_never_gate(snap):
+    """An obs_* timing key drifting (here: the overhead fraction tripling)
+    must not fire the strict-derived check — it is machine noise by the
+    naming contract, like speedup before it."""
+    base = copy.deepcopy(snap)
+    base["rows"][0]["derived"]["obs_overhead_frac"] = 0.01
+    base["rows"][0]["derived"]["probe_wall_ms"] = 3.0
+    new = copy.deepcopy(base)
+    new["rows"][0]["derived"]["obs_overhead_frac"] = 0.03
+    new["rows"][0]["derived"]["probe_wall_ms"] = 9.0
+    assert compare_runs(base, new) == []
+    # ...while a deterministic obs-adjacent count still gates
+    new["rows"][0]["derived"]["chains"] = "changed"
+    assert [r["kind"] for r in compare_runs(base, new)] == ["derived-drift"]
+
+
+def test_bench_0008_round_trips_and_has_overhead_row():
+    """The committed PR-8 baseline: digest self-consistent, and the
+    overhead_obs row records bit-identical logits with obs on/off."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_0008.json")
+    base = load_snapshot(path)
+    verify_digest(base, path)
+    rows = [r for r in base["rows"] if r["name"].startswith("overhead_obs/")]
+    assert rows, "baseline lost its overhead_obs row"
+    assert all(r["derived"]["bit_identical"] for r in rows)
+    assert compare_runs(base, copy.deepcopy(base)) == []
