@@ -643,6 +643,54 @@ def accuracy():
          inputs=input_digest(images))
 
 
+def e2e_transformer():
+    """The generic graph->task compiler's LM rows: the reduced decoder-only
+    transformer (gemma-2b smoke) and Mamba1 stack (falcon-mamba-7b smoke)
+    lowered through the SAME serving compiler as the ResNet pipeline and
+    timed executable vs executable (pallas task kernels vs the lax-int
+    mirror).  Deterministic content: bit-exactness (the acceptance gate for
+    the int8 LM arithmetic), the lowered task census, and the seeded token
+    digest; FPS keys are wall-derived and volatile."""
+    print("\n## e2e_transformer — compiled LM inference through the generic "
+          "compiler (interpret-mode timings off-TPU)")
+    print("name,us_per_call,derived")
+    from repro.compile import compile_model, init_lm_params, lm_config
+    from repro.compile import lowering
+    from repro.configs.base import get_smoke_config
+    batch, seq_len = 4, 16
+    rng = nprng()
+    for label, name in (("transformer", "gemma-2b"),
+                        ("ssm", "falcon-mamba-7b")):
+        cfg = lm_config(get_smoke_config(name), seq_len=seq_len)
+        params = init_lm_params(cfg, seed=SEED)
+        toks = rng.integers(0, cfg.vocab_size,
+                            (batch, seq_len)).astype(np.int32)
+        cm_p = compile_model(cfg, params, backend="pallas",
+                             batch_sizes=(batch,))
+        cm_i = compile_model(cfg, params, backend="lax-int",
+                             batch_sizes=(batch,))
+        exact = bool(np.array_equal(np.asarray(cm_p(toks)),
+                                    np.asarray(cm_i(toks))))
+        us_p = _time(lambda: cm_p(toks), n=1)
+        us_i = _time(lambda: cm_i(toks), n=1)
+        plan = lowering.plan_lm(lowering.optimized_graph(cfg), params)
+        kinds = {}
+        for t in plan.tasks:
+            kinds[t.kind] = kinds.get(t.kind, 0) + 1
+        folds = sum(1 for t in plan.tasks
+                    if getattr(t, "skip", None) is not None)
+        emit(f"e2e_transformer/{label}", us_p,
+             fps=round(batch / (us_p / 1e6), 2),
+             int_graph_fps=round(batch / (us_i / 1e6), 2),
+             bit_exact=exact,
+             layers=cfg.num_layers, seq_len=seq_len,
+             vocab=cfg.vocab_size,
+             tasks="|".join(f"{k}:{v}" for k, v in sorted(kinds.items())),
+             residual_folds=folds,
+             retraces=max(cm_p.trace_counts.values()),
+             inputs=input_digest(toks))
+
+
 def kernels_micro():
     print("\n## kernels_micro — interpret-mode timings (TPU is the target)")
     print("name,us_per_call,derived")
@@ -713,7 +761,8 @@ def main(argv=None) -> None:
     # prior run's rows leak into this run's JSON/digest
     benches = dict(table3_fps=table3_fps, table4_buffers=table4_buffers,
                    fig13_addfold=fig13_addfold, e2e_pallas=e2e_pallas,
-                   e2e_stream=e2e_stream, e2e_tuned=e2e_tuned,
+                   e2e_stream=e2e_stream, e2e_transformer=e2e_transformer,
+                   e2e_tuned=e2e_tuned,
                    e2e_sharded=e2e_sharded, e2e_slo=e2e_slo,
                    overhead_obs=overhead_obs, accuracy=accuracy,
                    kernels_micro=kernels_micro, roofline=roofline)

@@ -1,20 +1,29 @@
 """``repro.compile`` — typed quantized-model API + graph-driven backend
 compiler for the serving path.
 
-    parse (core.graph builders) -> optimize (core.graph.optimize) ->
+    parse (core.graph builders) -> optimize (core.graph.optimize[_lm]) ->
     tune (repro.tune: per-task KernelConfig via compile_model(tune=...)) ->
     lower (compile.lowering + a registered Backend) ->
     execute (compile.CompiledModel: fixed-shape AOT executables per bucket)
 
-See docs/serving.md for the end-to-end flow and docs/tuning.md for the
-design-space exploration layer.
+The lowering stage is generic: a node-kind -> task registry
+(``lowering.register_task``) plus per-(backend, kind) execution impls
+(``backends.register_task_impl``) drive a topological walk, so the same
+compiler serves the conv pipeline and the int8 transformer / SSM stacks.
+See docs/serving.md for the end-to-end flow, docs/compiler.md for the
+registry contracts, and docs/tuning.md for the design-space layer.
 """
 from repro.compile.params import (                       # noqa: F401
     QConvParams, QLinearParams, QBlockParams, QResNetParams, ensure_typed)
+from repro.compile.lm_params import (                    # noqa: F401
+    LM_A_SPEC, QLMConfig, QLMParams, QMatmulParams, QSSMLayerParams,
+    QTransformerLayerParams, hidden_out_spec, init_lm_params, lm_config)
 from repro.compile.lowering import (                     # noqa: F401
-    LoweringError, LoweringPlan, StemTask, BlockTask, HeadTask,
-    model_graph, optimized_graph, plan_model, annotate_tuning)
+    LoweringError, LoweringPlan, LMPlan, StemTask, BlockTask, HeadTask,
+    MatmulTask, AttentionTask, ScanTask, model_graph, optimized_graph,
+    plan_model, plan_lm, annotate_tuning, register_task, tuning_key)
 from repro.compile.backends import (                     # noqa: F401
-    Backend, register_backend, get_backend, list_backends)
+    Backend, register_backend, get_backend, list_backends,
+    register_task_impl, get_task_impl, lower_lm)
 from repro.compile.compiler import (                     # noqa: F401
     CompiledModel, compile_model, lower_forward)

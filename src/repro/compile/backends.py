@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import quant as Q
 from repro.compile import lowering
+from repro.compile import lm_params as LP
 from repro.compile.params import (
     QConvParams, QResNetParams, activation_out_specs)
 
@@ -108,6 +109,221 @@ def _float_head(h_u8, fc, in_spec=A_SPEC):
 
 
 # ---------------------------------------------------------------------------
+# LM task lowering: per-(backend, kind) implementation registry
+# ---------------------------------------------------------------------------
+#
+# The generic compiler (lowering.plan_lm) produces an ordered task program;
+# HOW each task kind executes is a per-backend choice registered here.  The
+# int8 matmul arithmetic is shared (so pallas and lax-int are bit-exact by
+# construction, like the conv pipeline); attention and scan pair the pallas
+# kernel with its bit-exact lax mirror.  Adding a node kind = register a
+# handler in lowering.TASK_HANDLERS + one impl per backend here.
+
+_TASK_IMPLS: Dict[tuple, Callable] = {}
+
+
+def register_task_impl(backend_name: str, kind: str):
+    """Register ``impl(task, ctx)`` as how ``backend_name`` executes tasks
+    of ``kind``.  ``ctx`` is the :class:`_LMContext` of the running forward;
+    the impl reads ``ctx.env[task.inputs[i]]`` and writes
+    ``ctx.env[task.output]`` (plus its quant spec into ``ctx.specs``)."""
+    def deco(fn):
+        _TASK_IMPLS[(backend_name, kind)] = fn
+        return fn
+    return deco
+
+
+def get_task_impl(backend_name: str, kind: str) -> Callable:
+    impl = _TASK_IMPLS.get((backend_name, kind))
+    if impl is None:
+        have = sorted(k for b, k in _TASK_IMPLS if b == backend_name)
+        raise lowering.LoweringError(
+            f"backend {backend_name!r} has no impl for task kind {kind!r} "
+            f"(has: {have})")
+    return impl
+
+
+class _LMContext:
+    """Mutable state one LM forward pass threads through the task impls."""
+
+    def __init__(self, params, cfg, consumer_xspec):
+        self.params = params
+        self.cfg = cfg
+        self.consumer_xspec = consumer_xspec   # tensor -> consuming x_spec
+        self.env: Dict[str, jnp.ndarray] = {}  # tensor name -> value
+        self.specs: Dict[str, Q.QSpec] = {}    # tensor name -> int8 grid
+
+    def put(self, name, value, spec=None):
+        self.env[name] = value
+        if spec is not None:
+            self.specs[name] = spec
+
+    def out_spec(self, tensor: str) -> Q.QSpec:
+        """Grid a float task output quantizes onto: its consumer's input
+        grid (every float interlude hands an int8 stream to a matmul)."""
+        try:
+            return self.consumer_xspec[tensor]
+        except KeyError:
+            raise lowering.LoweringError(
+                f"tensor {tensor!r} has no consuming matmul to define its "
+                f"quantization grid") from None
+
+
+def _lm_matmul_prologue(t, ctx):
+    """Shared int32 accumulator init: bias at the product domain, plus the
+    folded residual stream shift-aligned into it (the acc_init hook — a pure
+    left shift on pow2 grids, so the fold is exact)."""
+    mp = ctx.params.matmul(t.layer, t.role)
+    x = ctx.env[t.inputs[0]]
+    B, S, _ = x.shape
+    acc0 = jnp.broadcast_to(mp.bq[None, :].astype(jnp.int32),
+                            (B * S, t.dout))
+    if t.skip is not None:
+        skip = ctx.env[t.skip].astype(jnp.int32).reshape(B * S, t.dout)
+        acc0 = acc0 + Q.shift_align(
+            skip, ctx.params.skip_exp(t.layer, t.role) - mp.product_exp)
+    return mp, x.reshape(B * S, t.din), acc0, (B, S)
+
+
+def _lm_matmul_epilogue(acc, t, mp, shape, ctx):
+    if t.fused_relu:
+        acc = jnp.maximum(acc, 0)
+    yq = Q.requantize_shift(acc, mp.product_exp, mp.y_spec)
+    ctx.put(t.output, yq.reshape(shape + (t.dout,)), mp.y_spec)
+
+
+@register_task_impl("pallas", "matmul")
+def _pallas_matmul(t, ctx):
+    from repro.kernels.matmul_int8.ops import matmul_int8_op
+
+    mp, x2d, acc0, shape = _lm_matmul_prologue(t, ctx)
+    acc = matmul_int8_op(x2d, mp.wq, acc0, config=t.config)
+    _lm_matmul_epilogue(acc, t, mp, shape, ctx)
+
+
+@register_task_impl("lax-int", "matmul")
+def _lax_matmul(t, ctx):
+    mp, x2d, acc0, shape = _lm_matmul_prologue(t, ctx)
+    acc = jax.lax.dot(x2d.astype(jnp.int32), mp.wq.astype(jnp.int32),
+                      preferred_element_type=jnp.int32) + acc0
+    _lm_matmul_epilogue(acc, t, mp, shape, ctx)
+
+
+def _lm_attn_qkv(t, ctx):
+    """Dequantize the q/k/v streams off their producing matmuls' grids into
+    the (B, S, heads, hd) layout both attention cores consume."""
+    B, S, _ = ctx.env[t.inputs[0]].shape
+    q, k, v = (Q.dequantize(ctx.env[name], ctx.specs[name])
+               for name in t.inputs)
+    return (q.reshape(B, S, t.heads, t.head_dim),
+            k.reshape(B, S, t.kv_heads, t.head_dim),
+            v.reshape(B, S, t.kv_heads, t.head_dim))
+
+
+def _lm_attn_finish(o, t, ctx):
+    B, S = o.shape[:2]
+    spec = ctx.out_spec(t.output)
+    ctx.put(t.output,
+            Q.quantize(o.reshape(B, S, t.heads * t.head_dim), spec), spec)
+
+
+@register_task_impl("pallas", "attention")
+def _pallas_attention(t, ctx):
+    from repro.kernels.flash_attention.ops import flash_attention_op
+
+    q, k, v = _lm_attn_qkv(t, ctx)
+    o = flash_attention_op(q, k, v, causal=t.causal, config=t.config)
+    _lm_attn_finish(o, t, ctx)
+
+
+@register_task_impl("lax-int", "attention")
+def _lax_attention(t, ctx):
+    from repro.kernels.flash_attention.ops import attn_tiles
+    from repro.kernels.flash_attention.ref import flash_attention_mirror
+
+    q, k, v = _lm_attn_qkv(t, ctx)
+    # the kernel wrapper's GQA flattening, op-for-op, around the bit-exact
+    # tiled mirror — SAME tile pair, so the two backends cannot drift
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    kr = jnp.repeat(k, H // KV, axis=2)
+    vr = jnp.repeat(v, H // KV, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    bq, bk = attn_tiles(Sq, Sk, t.config)
+    o = flash_attention_mirror(qf, kf, vf, causal=t.causal, bq=bq, bk=bk)
+    o = o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    _lm_attn_finish(o, t, ctx)
+
+
+def _lm_scan_operands(t, ctx):
+    u, dt, Bc, Cc = (Q.dequantize(ctx.env[name], ctx.specs[name])
+                     for name in t.inputs[:4])
+    dt = jax.nn.softplus(dt)
+    A = ctx.params.layers[t.layer].A
+    B = u.shape[0]
+    h0 = jnp.zeros((B, t.d_inner, t.ssm_state), jnp.float32)
+    return u, dt, A, Bc, Cc, h0
+
+
+def _lm_scan_finish(y, t, ctx):
+    if t.gated:
+        z = Q.dequantize(ctx.env[t.inputs[4]], ctx.specs[t.inputs[4]])
+        y = y * jax.nn.silu(z)
+    spec = ctx.out_spec(t.output)
+    ctx.put(t.output, Q.quantize(y, spec), spec)
+
+
+@register_task_impl("pallas", "scan")
+def _pallas_scan(t, ctx):
+    from repro.kernels.selective_scan.ops import selective_scan_op
+
+    u, dt, A, Bc, Cc, h0 = _lm_scan_operands(t, ctx)
+    y, _ = selective_scan_op(u, dt, A, Bc, Cc, h0, config=t.config)
+    _lm_scan_finish(y, t, ctx)
+
+
+@register_task_impl("lax-int", "scan")
+def _lax_scan(t, ctx):
+    from repro.kernels.selective_scan.ref import selective_scan_ref
+
+    u, dt, A, Bc, Cc, h0 = _lm_scan_operands(t, ctx)
+    y, _ = selective_scan_ref(u, dt, A, Bc, Cc, h0)
+    _lm_scan_finish(y, t, ctx)
+
+
+def lower_lm(impl_backend: str, g, cfg, params: LP.QLMParams) -> Callable:
+    """Shared LM lowering: plan the optimized graph (``lowering.plan_lm``),
+    bind every task to ``impl_backend``'s registered impl, and close over a
+    ``tokens -> logits`` forward that runs the task program over a tensor
+    environment — float embed in, float unembed (last position only) out.
+    Impl binding happens HERE, at lower time, so a backend missing a kind
+    fails before any executable is built."""
+    plan = lowering.plan_lm(g, params)
+    impls = {t.node: get_task_impl(impl_backend, t.kind) for t in plan.tasks}
+
+    # which int8 grid each float-task output quantizes onto: its consuming
+    # matmul's input grid (resolved at lower time from the plan)
+    consumer_xspec = {
+        t.inputs[0]: params.matmul(t.layer, t.role).x_spec
+        for t in plan.tasks if isinstance(t, lowering.MatmulTask)}
+    hidden_spec = LP.hidden_out_spec(params)
+
+    def forward(tokens):
+        ctx = _LMContext(params, cfg, consumer_xspec)
+        emb = jnp.take(params.embed, tokens, axis=0)       # (B, S, d) float
+        ctx.put(plan.embed, Q.quantize(emb, params.emb_spec),
+                params.emb_spec)
+        for t in plan.tasks:
+            impls[t.node](t, ctx)
+        h = Q.dequantize(ctx.env[plan.logits_in], hidden_spec)
+        return h[:, -1, :] @ params.unembed                # (B, vocab)
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
 # Built-in backends
 # ---------------------------------------------------------------------------
 
@@ -117,7 +333,9 @@ class LaxIntBackend:
     """Reference integer graph: lax convs, int32 accumulators, shift requant,
     residual add folded into conv1's accumulator init."""
 
-    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+    def lower(self, g, cfg, params) -> Callable:
+        if lowering._is_lm_cfg(cfg):
+            return lower_lm("lax-int", g, cfg, params)
         plan = lowering.plan_model(g, params)
         stem_out, block_outs = activation_out_specs(params, A_SPEC)
 
@@ -153,7 +371,9 @@ class PallasBackend:
     Each task's tuned :class:`~repro.tune.KernelConfig` (stamped on the graph
     by ``lowering.annotate_tuning``) selects the kernel's tiling/grid."""
 
-    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+    def lower(self, g, cfg, params) -> Callable:
+        if lowering._is_lm_cfg(cfg):
+            return lower_lm("pallas", g, cfg, params)
         from repro.kernels.conv_stem.ops import conv_stem_op
         from repro.kernels.resblock_fused.ops import resblock_fused_op
 
@@ -206,7 +426,11 @@ class PallasStreamBackend:
         self.fuse_stem = fuse_stem
         self.vmem_budget = vmem_budget
 
-    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+    def lower(self, g, cfg, params) -> Callable:
+        if lowering._is_lm_cfg(cfg):
+            # no LM megakernel exists; degrade gracefully to the per-task
+            # pallas kernels (the singleton-chain fallback, graph-wide)
+            return lower_lm("pallas", g, cfg, params)
         from repro.core import dataflow
         from repro.kernels.conv_stem.ops import conv_stem_op
         from repro.kernels.megakernel.megakernel import ChainBlockSpec
@@ -294,7 +518,12 @@ class FloatBackend:
     grid.  Tracks the integer backends to float rounding error — the serving
     A/B reference for quantization loss."""
 
-    def lower(self, g, cfg, params: QResNetParams) -> Callable:
+    def lower(self, g, cfg, params) -> Callable:
+        if lowering._is_lm_cfg(cfg):
+            raise lowering.LoweringError(
+                f"backend 'float' has no LM lowering for config "
+                f"{cfg.name!r} (family={cfg.family!r}); use 'pallas' or "
+                f"'lax-int'")
         plan = lowering.plan_model(g, params)
         stem_out, block_outs = activation_out_specs(params, A_SPEC)
 

@@ -67,6 +67,11 @@ class CompiledModel:
         self.backend = backend
         self.batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
         self.tuning = dict(tuning) if tuning else None
+        # LM configs serve token batches, conv configs image batches: the
+        # input contract (shape + dtype) is decided once here and every
+        # executable path (default/device/shard) lowers from it
+        self._is_lm = lowering._is_lm_cfg(cfg)
+        self._in_dtype = jnp.int32 if self._is_lm else jnp.float32
         self.graph = lowering.annotate_tuning(
             lowering.optimized_graph(cfg), self.tuning)
         self._forward = backend.lower(self.graph, cfg, params)
@@ -117,7 +122,12 @@ class CompiledModel:
 
     def input_spec(self, batch: int, sharding=None) -> jax.ShapeDtypeStruct:
         """THE input-shape contract of every executable this model compiles
-        (default, per-device, and SPMD placements all lower from here)."""
+        (default, per-device, and SPMD placements all lower from here):
+        ``(batch, img, img, 3) float32`` images for conv configs,
+        ``(batch, seq_len) int32`` token batches for LM configs."""
+        if self._is_lm:
+            return jax.ShapeDtypeStruct(
+                (batch, self.cfg.seq_len), jnp.int32, sharding=sharding)
         return jax.ShapeDtypeStruct(
             (batch, self.cfg.img, self.cfg.img, 3), jnp.float32,
             sharding=sharding)
@@ -267,7 +277,7 @@ class CompiledModel:
         bucket >= n from ``buckets``, zero-pad up to it, chunk batches
         beyond the largest bucket, slice the pad rows off the logits.
         ``run_bucket(imgs, bucket, padded)`` executes one full bucket."""
-        images = jnp.asarray(images, jnp.float32)
+        images = jnp.asarray(images, self._in_dtype)
         n = images.shape[0]
         if n == 0:
             raise ValueError("empty batch")
@@ -355,6 +365,11 @@ def _resolve_tuning(cfg, params, backend_name, batch_sizes, tune):
             raise ValueError(
                 f"tune={tune!r}: expected a task->KernelConfig dict, a "
                 f"TuneResult, or one of 'auto'/'analytic'/'device'")
+        if lowering._is_lm_cfg(cfg):
+            raise ValueError(
+                f"tune={tune!r}: the search modes cover conv configs only; "
+                f"pass an explicit task->KernelConfig dict for LM config "
+                f"{cfg.name!r} (spaces: tune.space.lm_model_space)")
         res = T.search(cfg, params, backend=backend_name,
                        batch=max(batch_sizes),
                        device=tune != "analytic",

@@ -1,27 +1,35 @@
-"""Graph-driven lowering plan: optimized IR -> ordered fused tasks.
+"""Graph-driven lowering: optimized IR -> ordered task program.
 
 The paper's flow is *parse -> optimize the graph -> generate the accelerator*.
-``core.graph.optimize`` performs the middle stage (fold_bn, merge_relu,
-loop_merge, temporal_reuse, add_fold); this module performs the front half of
-the last stage: it walks the **optimized** IR and extracts the task sequence a
-backend turns into executable code —
+``core.graph`` performs the middle stage; this module performs the front half
+of the last stage — and it is GENERIC: a node-kind -> handler registry
+(:func:`register_task`) drives a walk over the **topologically sorted**
+optimized graph, so any graph whose node kinds are registered lowers to a
+task program, not just the ResNet stem->blocks->head chain.
 
-  * ``StemTask``  — the stem conv with BN and ReLU folded in,
-  * ``BlockTask`` — one residual block as two fused conv tasks (conv0 with the
-    optional merged 1x1 downsample + skip stream, conv1 with the add folded
-    into its accumulator init),
-  * ``HeadTask``  — global average pool + classifier.
+Task kinds:
 
-The walk is strict: it *requires* the post-optimization invariants (no bn /
-relu / add nodes, every conv0 emits a skip stream, every conv1 consumes one)
-and raises ``LoweringError`` otherwise, so a backend can never silently
-compile the unoptimized dataflow.  Node->parameter binding uses the
-``role``/``block`` attrs stamped by ``core.graph.build_resnet_graph``.
+  * ``StemTask`` / ``BlockTask`` / ``HeadTask`` — the conv pipeline, exactly
+    as before (conv pairing handled by the ``conv`` handler's walk state);
+  * ``MatmulTask`` — one quantized matmul, optionally with fused ReLU and
+    the residual add folded into its accumulator init (``acc_init``: the
+    skip stream enters the int32 product domain through a pure shift — the
+    paper's Fig. 13 add-fold generalized off the conv pipeline);
+  * ``AttentionTask`` / ``ScanTask`` — the float interludes of the LM
+    graphs, backed by the ``flash_attention`` / ``selective_scan`` kernels.
+
+Entry points: :func:`plan_model` (conv graphs -> ``LoweringPlan``),
+:func:`plan_lm` (LM graphs -> ``LMPlan``).  Both walks are strict: they
+*require* the post-optimization invariants (no bn / relu / add nodes; skip
+streams wired) and raise :class:`LoweringError` naming the offending node,
+its kind, and the failed check — a backend can never silently compile the
+unoptimized dataflow, and a failure on a new graph kind is diagnosable from
+the message alone.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import graph as G
 from repro.compile.params import QResNetParams
@@ -30,6 +38,16 @@ from repro.tune.config import KernelConfig
 
 class LoweringError(ValueError):
     """The graph does not satisfy the optimized-IR invariants."""
+
+
+def _node_err(node: G.Node, check: str) -> "LoweringError":
+    """Every strictness failure carries node id + kind + the check."""
+    return LoweringError(f"node {node.name!r} (kind={node.op}): {check}")
+
+
+# ---------------------------------------------------------------------------
+# Task records
+# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +72,54 @@ class BlockTask:
 class HeadTask:
     pool: str                 # pool kind ("avg")
     num_classes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTask:
+    """One int8 matmul node: inputs[0] @ W(layer, role) in int32, optional
+    fused ReLU, requantized onto the role's output grid.  ``skip`` names the
+    tensor whose int8 stream initializes the accumulator (the add-fold);
+    None means a plain matmul."""
+    kind = "matmul"
+    node: str
+    layer: int
+    role: str
+    din: int
+    dout: int
+    inputs: Tuple[str, ...]
+    output: str
+    skip: Optional[str] = None
+    fused_relu: bool = False
+    config: Optional[KernelConfig] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionTask:
+    """Causal (flash) attention over the layer's q/k/v streams."""
+    kind = "attention"
+    node: str
+    layer: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    causal: bool
+    inputs: Tuple[str, ...]   # (q, k, v) tensor names
+    output: str
+    config: Optional[KernelConfig] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanTask:
+    """Mamba1 selective scan; ``gated`` multiplies by silu(z) (inputs[4])."""
+    kind = "scan"
+    node: str
+    layer: int
+    d_inner: int
+    ssm_state: int
+    gated: bool
+    inputs: Tuple[str, ...]   # (u, dt, B, C[, z]) tensor names
+    output: str
+    config: Optional[KernelConfig] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,35 +151,235 @@ class LoweringPlan:
     head: HeadTask
 
 
+@dataclasses.dataclass(frozen=True)
+class LMPlan:
+    """An LM graph lowered to an ordered task program: the tasks run in
+    topological order over a tensor-name environment, bracketed by the float
+    embed / unembed head."""
+    tasks: Tuple[object, ...]          # Matmul/Attention/ScanTask, ordered
+    embed: str                         # embed node's output tensor
+    logits_in: str                     # tensor entering the unembed head
+    vocab: int
+    seq_len: int
+
+
+# ---------------------------------------------------------------------------
+# Node-kind -> handler registry
+# ---------------------------------------------------------------------------
+
+# handler(node, state) -> None; mutates the walk state.  Registered per node
+# kind; the walk dispatches every node of the topologically sorted graph
+# through this table, so new graph families plug in without touching the
+# walk itself.
+TASK_HANDLERS: Dict[str, Callable] = {}
+
+
+def register_task(op: str):
+    """Register the lowering handler for one node kind.  Re-registering
+    overrides (latest wins) — tests use this to stub custom kinds."""
+    def deco(fn):
+        TASK_HANDLERS[op] = fn
+        return fn
+    return deco
+
+
+@dataclasses.dataclass
+class _WalkState:
+    """Accumulator the handlers write into while the walk runs."""
+    g: G.Graph
+    # conv pipeline
+    stem: Optional[StemTask] = None
+    blocks: List[BlockTask] = dataclasses.field(default_factory=list)
+    head_pool: Optional[str] = None
+    head_fc: Optional[int] = None
+    pending_conv0: Optional[G.Node] = None
+    # generic task program
+    tasks: List[object] = dataclasses.field(default_factory=list)
+    embed: Optional[G.Node] = None
+    unembed: Optional[G.Node] = None
+
+
+def _walk(g: G.Graph) -> _WalkState:
+    """THE generic lowering driver: topological sort, then registry
+    dispatch per node.  Unregistered kinds fail loudly with the node id."""
+    state = _WalkState(g=g)
+    for n in G.topological_sort(g):
+        handler = TASK_HANDLERS.get(n.op)
+        if handler is None:
+            raise _node_err(
+                n, f"no lowering handler registered for this kind "
+                   f"(registered: {sorted(TASK_HANDLERS)})")
+        handler(n, state)
+    return state
+
+
+@register_task("input")
+@register_task("output")
+def _lower_noop(n: G.Node, state: _WalkState) -> None:
+    del n, state
+
+
+@register_task("conv")
+def _lower_conv(n: G.Node, state: _WalkState) -> None:
+    """The conv pipeline's stateful pairing walk (stem, conv0/conv1 pairs),
+    exactly the pre-registry semantics."""
+    role = n.attrs.get("role")
+    if role == "stem":
+        if not {"bn", "relu"} <= set(n.fused):
+            raise _node_err(n, "stem conv must have bn+relu folded in "
+                               "(fold_bn/merge_relu did not run)")
+        state.stem = StemTask(node=n.name, och=n.attrs["och"],
+                              config=n.attrs.get("kcfg"))
+    elif role == "conv0":
+        if state.pending_conv0 is not None:
+            raise _node_err(
+                n, f"conv0 follows unpaired conv0 "
+                   f"{state.pending_conv0.name!r}")
+        if not n.skip_out:
+            raise _node_err(n, "conv0 emits no skip stream — "
+                               "loop_merge/temporal_reuse did not run")
+        state.pending_conv0 = n
+    elif role == "conv1":
+        c0 = state.pending_conv0
+        if c0 is None or c0.attrs["block"] != n.attrs["block"]:
+            raise _node_err(n, "conv1 without its conv0 (pairing check)")
+        if n.skip_in is None or "add_fold" not in n.fused:
+            raise _node_err(n, "residual add not folded into conv1 "
+                               "(add_fold did not run)")
+        if n.skip_in not in c0.outputs[1:]:
+            raise _node_err(
+                n, f"skip input {n.skip_in!r} is not conv0's forwarded "
+                   f"stream {c0.outputs[1:]}")
+        state.blocks.append(BlockTask(
+            index=n.attrs["block"], conv0=c0.name, conv1=n.name,
+            stride=c0.attrs["stride"],
+            has_ds=any(f.startswith("downsample:") for f in c0.fused),
+            och=n.attrs["och"], config=c0.attrs.get("kcfg")))
+        state.pending_conv0 = None
+    elif role == "ds":
+        raise _node_err(n, "standalone downsample conv survived — "
+                           "loop_merge did not run")
+    else:
+        raise _node_err(n, "conv without a role attr")
+
+
+@register_task("pool")
+def _lower_pool(n: G.Node, state: _WalkState) -> None:
+    state.head_pool = n.attrs.get("kind", "avg")
+
+
+@register_task("linear")
+def _lower_linear(n: G.Node, state: _WalkState) -> None:
+    state.head_fc = n.attrs.get("dout")
+
+
+@register_task("matmul")
+def _lower_matmul(n: G.Node, state: _WalkState) -> None:
+    if n.attrs.get("role") is None or n.attrs.get("layer") is None:
+        raise _node_err(n, "matmul without role/layer attrs — cannot bind "
+                           "to a parameter slot")
+    state.tasks.append(MatmulTask(
+        node=n.name, layer=n.attrs["layer"], role=n.attrs["role"],
+        din=n.attrs["din"], dout=n.attrs["dout"],
+        inputs=tuple(n.inputs), output=n.outputs[0],
+        skip=n.skip_in, fused_relu="relu" in n.fused,
+        config=n.attrs.get("kcfg")))
+
+
+@register_task("attention")
+def _lower_attention(n: G.Node, state: _WalkState) -> None:
+    if len(n.inputs) != 3:
+        raise _node_err(n, f"attention needs (q, k, v) inputs, got "
+                           f"{len(n.inputs)}")
+    state.tasks.append(AttentionTask(
+        node=n.name, layer=n.attrs["layer"], heads=n.attrs["heads"],
+        kv_heads=n.attrs["kv_heads"], head_dim=n.attrs["head_dim"],
+        causal=n.attrs.get("causal", True),
+        inputs=tuple(n.inputs), output=n.outputs[0],
+        config=n.attrs.get("kcfg")))
+
+
+@register_task("scan")
+def _lower_scan(n: G.Node, state: _WalkState) -> None:
+    gated = n.attrs.get("gated", False)
+    want = 5 if gated else 4
+    if len(n.inputs) != want:
+        raise _node_err(n, f"scan needs (u, dt, B, C{', z' if gated else ''})"
+                           f" inputs, got {len(n.inputs)}")
+    state.tasks.append(ScanTask(
+        node=n.name, layer=n.attrs["layer"], d_inner=n.attrs["d_inner"],
+        ssm_state=n.attrs["ssm_state"], gated=gated,
+        inputs=tuple(n.inputs), output=n.outputs[0],
+        config=n.attrs.get("kcfg")))
+
+
+@register_task("embed")
+def _lower_embed(n: G.Node, state: _WalkState) -> None:
+    state.embed = n
+
+
+@register_task("unembed")
+def _lower_unembed(n: G.Node, state: _WalkState) -> None:
+    state.unembed = n
+
+
+# ---------------------------------------------------------------------------
+# Graph builders (dispatch on config kind)
+# ---------------------------------------------------------------------------
+
+
+def _is_lm_cfg(cfg) -> bool:
+    return hasattr(cfg, "seq_len") and getattr(cfg, "family", None) in (
+        "dense", "ssm")
+
+
 def model_graph(cfg) -> G.Graph:
-    """The (unoptimized) IR for a ResNetConfig — what the paper parses from
-    the QONNX export."""
+    """The (unoptimized) IR for a config — what the paper parses from the
+    QONNX export.  ResNet configs build the conv graph; LM configs
+    (``compile.lm_params.QLMConfig``) build the transformer / Mamba stack."""
+    if _is_lm_cfg(cfg):
+        if cfg.family == "dense":
+            return G.build_transformer_graph(cfg, cfg.seq_len)
+        return G.build_ssm_graph(cfg, cfg.seq_len)
     return G.build_resnet_graph(cfg.blocks_per_stage, cfg.base_width,
                                 cfg.img, cfg.num_classes)
 
 
 def optimized_graph(cfg) -> G.Graph:
+    if _is_lm_cfg(cfg):
+        return G.optimize_lm(model_graph(cfg))
     return G.optimize(model_graph(cfg))
 
 
+def tuning_key(n: G.Node) -> Optional[str]:
+    """The tuning-dict key of one lowered graph node (None if the node has
+    no tunable task): conv tasks keep the legacy ``stem``/``block{i}`` keys;
+    LM tasks are ``layer{i}/{role}`` (e.g. ``layer0/wq``, ``layer1/attn``)."""
+    if n.op == "conv":
+        role = n.attrs.get("role")
+        if role == "stem":
+            return "stem"
+        if role == "conv0":
+            return f"block{n.attrs['block']}"
+        return None
+    if n.op in ("matmul", "attention", "scan"):
+        return f"layer{n.attrs['layer']}/{n.attrs.get('role', n.op)}"
+    return None
+
+
 def annotate_tuning(g: G.Graph, tuning) -> G.Graph:
-    """Stamp tuned :class:`KernelConfig`\\ s onto the optimized graph's conv
-    nodes (``attrs["kcfg"]``) so :func:`plan_model` carries them into the
-    tasks and any backend sees the same assignment.  ``tuning`` maps plan
-    task keys (``"stem"``, ``"block{i}"``) to configs — the format
-    ``repro.tune.search`` returns and the JSON cache stores."""
+    """Stamp tuned :class:`KernelConfig`\\ s onto the optimized graph's task
+    nodes (``attrs["kcfg"]``) so the plan carries them into the tasks and
+    any backend sees the same assignment.  ``tuning`` maps task keys
+    (:func:`tuning_key`) to configs — the format ``repro.tune.search``
+    returns and the JSON cache stores."""
     if not tuning:
         return g
     for n in g.nodes:
-        if n.op != "conv":
+        key = tuning_key(n)
+        if key is None:
             continue
-        role = n.attrs.get("role")
-        if role == "stem":
-            c = tuning.get("stem")
-        elif role == "conv0":
-            c = tuning.get(f"block{n.attrs['block']}")
-        else:
-            continue
+        c = tuning.get(key)
         if c is not None:
             if not isinstance(c, KernelConfig):
                 c = KernelConfig.from_dict(c)
@@ -121,77 +387,39 @@ def annotate_tuning(g: G.Graph, tuning) -> G.Graph:
     return g
 
 
+# ---------------------------------------------------------------------------
+# Plan entry points
+# ---------------------------------------------------------------------------
+
+
+def _check_optimized(g: G.Graph) -> None:
+    for n in g.nodes:
+        if n.op in ("bn", "relu", "add"):
+            raise _node_err(
+                n, f"graph still contains a {n.op} node — run "
+                   f"core.graph.optimize() (or optimize_lm) before lowering")
+
+
 def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPlan:
-    """Walk an optimized graph into the ordered task list.
+    """Walk an optimized conv graph into the ordered task list.
 
     When ``params`` is given, the plan is cross-checked against the parameter
     containers (block count, downsample presence) so a graph/params mismatch
     fails at compile time, not with silently wrong logits.
     """
-    if any(n.op in ("bn", "relu", "add") for n in g.nodes):
+    _check_optimized(g)
+    state = _walk(g)
+
+    if state.stem is None or state.head_pool is None or state.head_fc is None:
         raise LoweringError(
-            "graph still contains bn/relu/add nodes — run "
-            "core.graph.optimize() before lowering")
+            "graph is missing stem / pool / classifier nodes "
+            "(not a lowered conv graph?)")
+    if state.pending_conv0 is not None:
+        raise _node_err(state.pending_conv0, "unpaired conv0 at end of walk")
 
-    stem = None
-    blocks: List[BlockTask] = []
-    head_pool = head_fc = None
-    pending_conv0 = None
-
-    for n in g.nodes:
-        if n.op == "conv":
-            role = n.attrs.get("role")
-            if role == "stem":
-                if not {"bn", "relu"} <= set(n.fused):
-                    raise LoweringError(
-                        f"{n.name}: stem must have bn+relu folded in")
-                stem = StemTask(node=n.name, och=n.attrs["och"],
-                                config=n.attrs.get("kcfg"))
-            elif role == "conv0":
-                if pending_conv0 is not None:
-                    raise LoweringError(
-                        f"{n.name}: conv0 follows unpaired conv0 "
-                        f"{pending_conv0.name}")
-                if not n.skip_out:
-                    raise LoweringError(
-                        f"{n.name}: conv0 emits no skip stream — "
-                        "loop_merge/temporal_reuse did not run")
-                pending_conv0 = n
-            elif role == "conv1":
-                c0 = pending_conv0
-                if c0 is None or c0.attrs["block"] != n.attrs["block"]:
-                    raise LoweringError(f"{n.name}: conv1 without its conv0")
-                if n.skip_in is None or "add_fold" not in n.fused:
-                    raise LoweringError(
-                        f"{n.name}: residual add not folded into conv1")
-                if n.skip_in not in c0.outputs[1:]:
-                    raise LoweringError(
-                        f"{n.name}: skip input {n.skip_in!r} is not conv0's "
-                        f"forwarded stream {c0.outputs[1:]}")
-                blocks.append(BlockTask(
-                    index=n.attrs["block"], conv0=c0.name, conv1=n.name,
-                    stride=c0.attrs["stride"],
-                    has_ds=any(f.startswith("downsample:") for f in c0.fused),
-                    och=n.attrs["och"], config=c0.attrs.get("kcfg")))
-                pending_conv0 = None
-            elif role == "ds":
-                raise LoweringError(
-                    f"{n.name}: standalone downsample conv survived — "
-                    "loop_merge did not run")
-            else:
-                raise LoweringError(f"{n.name}: conv without a role attr")
-        elif n.op == "pool":
-            head_pool = n.attrs.get("kind", "avg")
-        elif n.op == "linear":
-            head_fc = n.attrs.get("dout")
-
-    if stem is None or head_pool is None or head_fc is None:
-        raise LoweringError("graph is missing stem / pool / classifier")
-    if pending_conv0 is not None:
-        raise LoweringError(f"unpaired conv0 {pending_conv0.name}")
-
-    plan = LoweringPlan(stem=stem, blocks=blocks,
-                        head=HeadTask(pool=head_pool, num_classes=head_fc))
+    plan = LoweringPlan(stem=state.stem, blocks=state.blocks,
+                        head=HeadTask(pool=state.head_pool,
+                                      num_classes=state.head_fc))
 
     if params is not None:
         if len(params.blocks) != len(plan.blocks):
@@ -201,9 +429,50 @@ def plan_model(g: G.Graph, params: Optional[QResNetParams] = None) -> LoweringPl
         for t in plan.blocks:
             if params.blocks[t.index].has_ds != t.has_ds:
                 raise LoweringError(
-                    f"block {t.index}: graph downsample={t.has_ds} but "
-                    f"params downsample={params.blocks[t.index].has_ds}")
+                    f"block {t.index} (node {t.conv0!r}): graph "
+                    f"downsample={t.has_ds} but params "
+                    f"downsample={params.blocks[t.index].has_ds}")
     return plan
+
+
+def plan_lm(g: G.Graph, params=None) -> LMPlan:
+    """Walk an optimized LM graph into the ordered task program.
+
+    Strictness: adds must be folded (``add_fold_matmul``), ReLUs merged,
+    embed/unembed present.  When ``params`` (a
+    :class:`~repro.compile.lm_params.QLMParams`) is given, every matmul
+    task's (layer, role) binding is resolved against it at plan time."""
+    _check_optimized(g)
+    state = _walk(g)
+
+    if state.embed is None or state.unembed is None:
+        raise LoweringError(
+            "graph is missing embed / unembed nodes (not an LM graph?)")
+    if not state.tasks:
+        raise LoweringError("LM graph lowered to zero tasks")
+    if state.stem is not None or state.blocks:
+        raise LoweringError(
+            "graph mixes conv and LM task kinds — no backend lowers both "
+            "in one plan")
+
+    if params is not None:
+        if len({t.layer for t in state.tasks}) != len(params.layers):
+            raise LoweringError(
+                f"graph has {len({t.layer for t in state.tasks})} layers "
+                f"but params carry {len(params.layers)}")
+        for t in state.tasks:
+            if isinstance(t, MatmulTask):
+                mp = params.matmul(t.layer, t.role)   # raises KeyError
+                if mp.wq.shape != (t.din, t.dout):
+                    raise LoweringError(
+                        f"node {t.node!r} (kind=matmul): weight shape "
+                        f"{tuple(mp.wq.shape)} != graph ({t.din}, {t.dout})")
+
+    return LMPlan(tasks=tuple(state.tasks),
+                  embed=state.embed.outputs[0],
+                  logits_in=state.unembed.inputs[0],
+                  vocab=state.unembed.attrs["dout"],
+                  seq_len=state.embed.attrs["seq_len"])
 
 
 def plan_chains(plan: LoweringPlan, cfg, cuts=None, fuse_stem: bool = True,

@@ -226,12 +226,13 @@ def activation_out_specs(params: QResNetParams, default: QSpec):
     return params.blocks[0].conv0.x_spec, block_outs
 
 
-def ensure_typed(qparams) -> QResNetParams:
-    """Accept either the legacy dict layout or a typed container."""
-    if isinstance(qparams, QResNetParams):
+def ensure_typed(qparams):
+    """Accept the legacy dict layout or a typed container (conv or LM)."""
+    from repro.compile.lm_params import QLMParams
+    if isinstance(qparams, (QResNetParams, QLMParams)):
         return qparams
     if isinstance(qparams, dict):
         return QResNetParams.from_dict(qparams)
     raise TypeError(
-        f"expected QResNetParams or a quantize_params() dict, got "
-        f"{type(qparams).__name__}")
+        f"expected QResNetParams, QLMParams, or a quantize_params() dict, "
+        f"got {type(qparams).__name__}")

@@ -360,6 +360,91 @@ def resnet_block_shapes(blocks_per_stage: int, base: int = 16, img: int = 32
 
 
 # ---------------------------------------------------------------------------
+# TPU adaptation: LM task kinds (matmul / attention / scan) — the byte model
+# behind tune.space legality pruning and obs.profile rooflines for the
+# generic compiler's transformer / SSM task programs.  Same conventions as
+# the conv formulas: act_bytes=1 (int8 streams), int32 accumulators at 4B,
+# float interlude operands at 4B.
+# ---------------------------------------------------------------------------
+
+
+def matmul_task_hbm_bytes(M: int, K: int, N: int, bm: int, bn: int, bk: int,
+                          acc_init: bool = False, act_bytes: int = 1,
+                          w_bytes: int = 1) -> int:
+    """HBM bytes one tiled int8 matmul moves: with grid (M/bm, N/bn, K/bk),
+    every A tile is re-fetched once per N block and every B tile once per M
+    block (the classic tiled-GEMM reuse), the bias once per (M, N) step pair
+    — and the folded residual stream (``acc_init``) enters as a full int32
+    (M, N) read."""
+    bm, bn, bk = (max(1, b) for b in (bm, bn, bk))
+    a = M * K * act_bytes * max(1, N // bn)
+    b = K * N * w_bytes * max(1, M // bm)
+    bias = N * 4 * max(1, M // bm)
+    out = M * N * 4
+    skip = M * N * 4 if acc_init else 0
+    return a + b + bias + out + skip
+
+
+def matmul_task_vmem_bytes(bm: int, bn: int, bk: int,
+                           act_bytes: int = 1, w_bytes: int = 1) -> int:
+    """Per-grid-step VMEM footprint of the int8 matmul kernel: one A tile,
+    one B tile, the int32 accumulator scratch, and the int32 acc-init /
+    output tiles."""
+    bm, bn, bk = (max(1, b) for b in (bm, bn, bk))
+    return (bm * bk * act_bytes + bk * bn * w_bytes
+            + 3 * bm * bn * 4)           # scratch + acc_init + out
+
+
+def attention_task_hbm_bytes(BH: int, Sq: int, Sk: int, hd: int,
+                             bq: int, bk: int, elt_bytes: int = 4) -> int:
+    """HBM bytes one flash-attention call moves (per fused (batch*heads)
+    instance set): q and o move once, but K and V are re-streamed by every
+    q-tile grid step — the term the ``bq`` knob amortizes."""
+    bq = max(1, bq)
+    q_steps = max(1, Sq // bq)
+    qo = 2 * BH * Sq * hd * elt_bytes
+    kv = 2 * BH * Sk * hd * elt_bytes * q_steps
+    return qo + kv
+
+
+def attention_task_vmem_bytes(Sk: int, hd: int, bq: int, bk: int,
+                              elt_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint of the flash kernel: one q/o tile pair,
+    the streaming K/V tile pair, the (bq, bk) score tile, and the online
+    softmax state (m, l, acc)."""
+    bq, bk = max(1, bq), max(1, bk)
+    return (2 * bq * hd * elt_bytes      # q tile + acc/o tile
+            + 2 * bk * hd * elt_bytes    # K/V tiles
+            + bq * bk * elt_bytes        # score tile
+            + 2 * bq * elt_bytes)        # m, l
+
+
+def scan_task_hbm_bytes(B: int, S: int, d_inner: int, N: int, bd: int,
+                        elt_bytes: int = 4) -> int:
+    """HBM bytes one selective-scan call moves: u/dt/y move once, but the
+    per-step B_t/C_t projections are re-read by every d_inner block instance
+    (grid (B, d_inner/bd)) — the term the ``bd`` knob amortizes — plus the
+    A slice and the h state in/out."""
+    bd = max(1, bd)
+    d_steps = max(1, d_inner // bd)
+    seq = 3 * B * S * d_inner * elt_bytes            # u, dt, y
+    bc = 2 * B * S * N * elt_bytes * d_steps         # B_t, C_t re-reads
+    a = d_inner * N * elt_bytes * B                  # A slice per batch inst
+    h = 2 * B * d_inner * N * elt_bytes              # h0 in, h_last out
+    return seq + bc + a + h
+
+
+def scan_task_vmem_bytes(S: int, N: int, bd: int, elt_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint of the scan kernel: the (bd, N) state +
+    A slices pinned for the whole sequence walk, the full-sequence u/dt/y
+    stripes of the d block, and the (S, N) B/C streams."""
+    bd = max(1, bd)
+    return (2 * bd * N * elt_bytes       # A slice + h state
+            + 3 * S * bd * elt_bytes     # u, dt, y stripes
+            + 2 * S * N * elt_bytes)     # B_t, C_t
+
+
+# ---------------------------------------------------------------------------
 # ResNet layer tables (mirrors graph.build_resnet_graph; used by ILP/benchmarks)
 # ---------------------------------------------------------------------------
 

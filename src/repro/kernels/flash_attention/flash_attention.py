@@ -16,13 +16,17 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, hd, causal, kv_len):
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, hd, causal, kv_len,
+            q_offset):
     qi = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32) * (1.0 / np.sqrt(hd))   # (bq, hd)
     m = jnp.full((bq,), -jnp.inf, jnp.float32)
     l = jnp.zeros((bq,), jnp.float32)
     acc = jnp.zeros((bq, hd), jnp.float32)
-    q_pos = qi * bq + jnp.arange(bq)
+    # q rows are the LAST Sq positions of the kv sequence (decode-with-cache
+    # convention): row r sits at absolute position q_offset + qi*bq + r,
+    # where q_offset = Sk - Sq.  With Sq == Sk this is the usual triangle.
+    q_pos = q_offset + qi * bq + jnp.arange(bq)
 
     nk_all = kv_len // bk
 
@@ -47,7 +51,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, hd, causal, kv_len):
 
     if causal:
         # only K/V tiles that intersect the causal triangle of this q tile
-        nk = jnp.minimum(((qi + 1) * bq + bk - 1) // bk, nk_all)
+        nk = jnp.minimum(
+            (q_offset + (qi + 1) * bq + bk - 1) // bk, nk_all)
     else:
         nk = nk_all
     m, l, acc = jax.lax.fori_loop(0, nk, step, (m, l, acc))
@@ -56,15 +61,23 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, hd, causal, kv_len):
 
 def flash_attention(q, k, v, *, causal=True, bq=128, bk=128, interpret=False):
     """q: (BH, Sq, hd), k/v: (BH, Sk, hd).  Flattened batch*heads leading dim
-    (GQA head repetition handled by the wrapper)."""
+    (GQA head repetition handled by the wrapper).  When ``Sq < Sk`` the
+    queries are the suffix of the key sequence (decode with a prefilled
+    cache), so causal masking offsets q positions by ``Sk - Sq``."""
+    from repro.tune.config import largest_divisor_leq
+
     BH, Sq, hd = q.shape
     Sk = k.shape[1]
-    bq = min(bq, Sq)
-    bk = min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0
+    if causal and Sq > Sk:
+        raise ValueError(
+            f"causal attention needs Sq <= Sk (q is the kv suffix); "
+            f"got Sq={Sq} Sk={Sk}")
+    # snap tiles to divisors so any tuned (bq, bk) stays grid-legal
+    bq = largest_divisor_leq(Sq, bq)
+    bk = largest_divisor_leq(Sk, bk)
     return pl.pallas_call(
         functools.partial(_kernel, bq=bq, bk=bk, hd=hd, causal=causal,
-                          kv_len=Sk),
+                          kv_len=Sk, q_offset=Sk - Sq),
         grid=(BH, Sq // bq),
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),

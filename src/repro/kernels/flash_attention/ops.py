@@ -6,12 +6,30 @@ import jax.numpy as jnp
 
 from repro.kernels.common import use_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.tune.config import KernelConfig, largest_divisor_leq
 
 
-@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
-def flash_attention_op(q, k, v, *, causal=True, bq=128, bk=128):
-    """q: (B,S,H,hd), k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+def attn_tiles(Sq: int, Sk: int, config: KernelConfig = None,
+               bq: int = 128, bk: int = 128):
+    """The (bq, bk) tile pair one attention call runs with: config overrides
+    the defaults (``bm`` is the query tile, ``bk`` the kv tile — reusing the
+    matmul knob names so ONE KernelConfig type serves every task kind),
+    snapped to divisors of the actual sequence lengths.  One home for the
+    mapping so the kernel and its bit-exact lax mirror can never tile
+    differently."""
+    if config is not None:
+        bq = config.resolve("bm", bq)
+        bk = config.resolve("bk", bk)
+    return largest_divisor_leq(Sq, bq), largest_divisor_leq(Sk, bk)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "config"))
+def flash_attention_op(q, k, v, *, causal=True, bq=128, bk=128,
+                       config: KernelConfig = None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd).  ``Sq < Sk`` means
+    decode with a prefilled cache (the q rows are the kv suffix)."""
     B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
     KV = k.shape[2]
     G = H // KV
     kr = jnp.repeat(k, G, axis=2)
@@ -19,6 +37,7 @@ def flash_attention_op(q, k, v, *, causal=True, bq=128, bk=128):
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
     kf = kr.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
     vf = vr.transpose(0, 2, 1, 3).reshape(B * H, -1, hd)
+    bq, bk = attn_tiles(Sq, Sk, config, bq, bk)
     o = flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bk,
                         interpret=use_interpret())
     return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

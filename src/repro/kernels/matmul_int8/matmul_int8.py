@@ -44,11 +44,17 @@ def matmul_int8(a, b, acc_init=None, *, bm: int = 128, bn: int = 128,
                 bk: int = 128, interpret: bool = False):
     """a: (M,K) int8, b: (K,N) int8, acc_init: optional (M,N) int32.
     Returns (M,N) int32 = a @ b (+ acc_init)."""
+    from repro.tune.config import largest_divisor_leq
+
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (a.shape, b.shape)
+    # snap requested tiles to divisors of the actual shape — a tile tuned at
+    # one (M, K, N) stays legal at every other (the KernelConfig.normalize
+    # contract, applied at the kernel boundary so no caller can trip the grid)
+    bm = largest_divisor_leq(M, bm)
+    bn = largest_divisor_leq(N, bn)
+    bk = largest_divisor_leq(K, bk)
     nk = K // bk
     has_init = acc_init is not None
     if acc_init is None:

@@ -12,9 +12,12 @@ from repro.tune.config import KernelConfig
 def matmul_int8_op(a, b, acc_init=None, *, bm=128, bn=128, bk=128,
                    config: KernelConfig = None):
     """``config`` (if given) overrides the explicit bm/bn/bk tile arguments
-    wherever it carries a non-default value — the tuner's handle on the MXU
-    tiling knobs."""
+    wherever it carries a set value — the tuner's handle on the MXU tiling
+    knobs.  Unset knobs (``None``/0) are resolved explicitly through
+    :meth:`KernelConfig.resolve`, never by truthiness."""
     if config is not None:
-        bm, bn, bk = config.bm or bm, config.bn or bn, config.bk or bk
+        bm = config.resolve("bm", bm)
+        bn = config.resolve("bn", bn)
+        bk = config.resolve("bk", bk)
     return matmul_int8(a, b, acc_init, bm=bm, bn=bn, bk=bk,
                        interpret=use_interpret())

@@ -5,9 +5,15 @@ import jax
 
 from repro.kernels.common import use_interpret
 from repro.kernels.selective_scan.selective_scan import selective_scan
+from repro.tune.config import KernelConfig
 
 
-@partial(jax.jit, static_argnames=("bd",))
-def selective_scan_op(u, dt, A, Bc, Cc, h0, *, bd=128):
+@partial(jax.jit, static_argnames=("bd", "config"))
+def selective_scan_op(u, dt, A, Bc, Cc, h0, *, bd=128,
+                      config: KernelConfig = None):
+    """``config.cout_block`` (the channel-block knob) overrides ``bd``, the
+    d_inner slice each grid instance keeps resident in VMEM."""
+    if config is not None:
+        bd = config.resolve("cout_block", bd)
     return selective_scan(u, dt, A, Bc, Cc, h0, bd=bd,
                           interpret=use_interpret())

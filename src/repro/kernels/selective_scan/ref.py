@@ -1,4 +1,10 @@
-"""Pure-jnp oracle: naive sequential selective scan."""
+"""Pure-jnp oracle: naive sequential selective scan.
+
+The per-step output projection is written as the same ``sum(h * C)``
+mul-reduce the kernel executes (NOT an einsum/dot): in interpret mode an
+identical op sequence produces identical floats, which is what lets the
+conformance matrix pin the kernel bit-exactly against this oracle.
+"""
 import jax
 import jax.numpy as jnp
 
@@ -8,7 +14,7 @@ def selective_scan_ref(u, dt, A, Bc, Cc, h0):
         u_t, dt_t, b_t, c_t = xs
         a = jnp.exp(dt_t[:, :, None] * A)
         h = a * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
-        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)     # mirrors the kernel
         return h, y
 
     xs = tuple(jnp.swapaxes(t, 0, 1) for t in (u, dt, Bc, Cc))

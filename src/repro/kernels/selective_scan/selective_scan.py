@@ -22,10 +22,17 @@ def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, *,
     h = h0_ref[0]                    # (bd, N)
 
     def step(t, h):
-        u = u_ref[0, t]              # (bd,)
-        dt = dt_ref[0, t]            # (bd,)
-        Bt = b_ref[0, t]             # (N,)
-        Ct = c_ref[0, t]             # (N,)
+        # t is a traced loop index: load through pl.load + pl.dslice — a
+        # bare ``ref[0, t]`` is the int-index pattern that trips the pallas
+        # indexer outside interpret mode (the PR-1 bug class)
+        u = pl.load(u_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                            slice(None)))[0, 0]      # (bd,)
+        dt = pl.load(dt_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                              slice(None)))[0, 0]    # (bd,)
+        Bt = pl.load(b_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                             slice(None)))[0, 0]     # (N,)
+        Ct = pl.load(c_ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                             slice(None)))[0, 0]     # (N,)
         a = jnp.exp(dt[:, None] * A)
         h = a * h + (dt * u)[:, None] * Bt[None, :]
         y = jnp.sum(h * Ct[None, :], axis=-1)      # (bd,)
@@ -40,10 +47,11 @@ def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref, *,
 def selective_scan(u, dt, A, Bc, Cc, h0, *, bd=128, interpret=False):
     """u, dt: (B,S,di) f32; A: (di,N); Bc, Cc: (B,S,N); h0: (B,di,N).
     Returns (y: (B,S,di), h_last: (B,di,N)).  D-term and gating live outside."""
+    from repro.tune.config import largest_divisor_leq
+
     B, S, di = u.shape
     N = A.shape[1]
-    bd = min(bd, di)
-    assert di % bd == 0
+    bd = largest_divisor_leq(di, bd)   # any tuned bd stays grid-legal
     grid = (B, di // bd)
     y, h_last = pl.pallas_call(
         functools.partial(_kernel, seq_len=S),

@@ -39,10 +39,12 @@ REFERENCE_HBM_GBPS = 25.6
 class TaskProfile:
     """One profiled task: measured wall time + modeled bytes."""
 
-    task: str                 # "stem", "b3", "stem+b0+b1" (chain)
-    kind: str                 # "stem" | "block" | "chain"
+    task: str                 # "stem", "b3", "stem+b0+b1", "layer0/attn"
+    kind: str                 # "stem" | "block" | "chain" |
+                              # "matmul" | "attention" | "scan"
     batch: int
-    batch_tile: int
+    batch_tile: int           # the task's primary amortizing knob (batch
+                              # tile for conv tasks; bm / bq / bd for LM)
     wall_us: float            # volatile (wall measurement)
     hbm_bytes: int            # modeled, deterministic
     vmem_bytes: int           # modeled, deterministic
@@ -136,6 +138,10 @@ def profile_tasks(cfg, qparams, backend: str = "pallas", batch: int = 4,
         raise ValueError(
             f"profile_tasks supports the kernel backends "
             f"('pallas', 'pallas-stream'), not {backend!r}")
+
+    if lowering._is_lm_cfg(cfg):
+        return _profile_lm_tasks(cfg, qparams, batch=batch, reps=reps,
+                                 seed=seed, ob=ob)
 
     params = ensure_typed(qparams)
     g = lowering.optimized_graph(cfg)
@@ -252,6 +258,108 @@ def profile_tasks(cfg, qparams, backend: str = "pallas", batch: int = 4,
                 profile_block(chain.blocks[0])   # backend's singleton fallback
             else:
                 profile_chain(chain)
+
+    if ob is not None:
+        for tp in out:
+            _attach(ob, cfg.name, tp)
+    return out
+
+
+def _profile_lm_tasks(cfg, qparams, batch: int, reps: int, seed: int,
+                      ob=None) -> List[TaskProfile]:
+    """The LM leg of :func:`profile_tasks`: time each matmul / attention /
+    scan task of the plan with seeded operands at serving shapes, paired
+    with the ``core.dataflow`` LM byte formulas.  Both pallas backends run
+    the identical per-task kernels for LM graphs, so one leg serves both."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dataflow
+    from repro.compile import lowering
+    from repro.compile.params import ensure_typed
+    from repro.tune.config import largest_divisor_leq
+
+    params = ensure_typed(qparams)
+    plan = lowering.plan_lm(lowering.optimized_graph(cfg), params)
+    rng = np.random.default_rng(seed)
+    S = cfg.seq_len
+    M = batch * S
+
+    def i8(*shape):
+        return jnp.asarray(
+            rng.integers(-128, 128, size=shape, dtype=np.int8))
+
+    def f32(*shape):
+        return jnp.asarray(rng.normal(0, 1, size=shape).astype(np.float32))
+
+    def knob(config, name, default):
+        v = default if config is None else config.resolve(name, default)
+        return v
+
+    role_of = {"attention": "attn", "scan": "scan"}
+    out: List[TaskProfile] = []
+    for t in plan.tasks:
+        # same key as lowering.tuning_key, so profile rows line up with the
+        # tuner's task keys
+        key = f"layer{t.layer}/{getattr(t, 'role', role_of.get(t.kind))}"
+        if t.kind == "matmul":
+            from repro.kernels.matmul_int8.ops import matmul_int8_op
+
+            x = i8(M, t.din)
+            acc0 = jnp.zeros((M, t.dout), jnp.int32)
+            mp = params.matmul(t.layer, t.role)
+            wall = _time_op(
+                lambda: matmul_int8_op(x, mp.wq, acc0, config=t.config),
+                reps)
+            bm = largest_divisor_leq(M, knob(t.config, "bm", 128))
+            bn = largest_divisor_leq(t.dout, knob(t.config, "bn", 128))
+            bk = largest_divisor_leq(t.din, knob(t.config, "bk", 128))
+            out.append(TaskProfile(
+                task=key, kind="matmul", batch=batch, batch_tile=bm,
+                wall_us=wall * 1e6,
+                hbm_bytes=dataflow.matmul_task_hbm_bytes(
+                    M, t.din, t.dout, bm, bn, bk,
+                    acc_init=t.skip is not None),
+                vmem_bytes=dataflow.matmul_task_vmem_bytes(bm, bn, bk)))
+        elif t.kind == "attention":
+            from repro.kernels.flash_attention.ops import (
+                attn_tiles, flash_attention_op)
+
+            q = f32(batch, S, t.heads, t.head_dim)
+            k = f32(batch, S, t.kv_heads, t.head_dim)
+            v = f32(batch, S, t.kv_heads, t.head_dim)
+            wall = _time_op(
+                lambda: flash_attention_op(q, k, v, causal=t.causal,
+                                           config=t.config), reps)
+            bq, bk = attn_tiles(S, S, t.config)
+            out.append(TaskProfile(
+                task=key, kind="attention", batch=batch, batch_tile=bq,
+                wall_us=wall * 1e6,
+                hbm_bytes=dataflow.attention_task_hbm_bytes(
+                    batch * t.heads, S, S, t.head_dim, bq, bk),
+                vmem_bytes=dataflow.attention_task_vmem_bytes(
+                    S, t.head_dim, bq, bk)))
+        elif t.kind == "scan":
+            from repro.kernels.selective_scan.ops import selective_scan_op
+
+            u = f32(batch, S, t.d_inner)
+            dt = jnp.abs(f32(batch, S, t.d_inner)) * 0.1
+            Bc = f32(batch, S, t.ssm_state)
+            Cc = f32(batch, S, t.ssm_state)
+            A = params.layers[t.layer].A
+            h0 = jnp.zeros((batch, t.d_inner, t.ssm_state), jnp.float32)
+            wall = _time_op(
+                lambda: selective_scan_op(u, dt, A, Bc, Cc, h0,
+                                          config=t.config), reps)
+            bd = largest_divisor_leq(t.d_inner,
+                                     knob(t.config, "cout_block", 128))
+            out.append(TaskProfile(
+                task=key, kind="scan", batch=batch, batch_tile=bd,
+                wall_us=wall * 1e6,
+                hbm_bytes=dataflow.scan_task_hbm_bytes(
+                    batch, S, t.d_inner, t.ssm_state, bd),
+                vmem_bytes=dataflow.scan_task_vmem_bytes(
+                    S, t.ssm_state, bd)))
 
     if ob is not None:
         for tp in out:

@@ -123,21 +123,31 @@ class Engine:
 @dataclasses.dataclass
 class ImageRequest:
     rid: int
-    image: np.ndarray                     # (H, W, 3) float in [0, 1)
-    logits: Optional[np.ndarray] = None   # (num_classes,) once served
+    image: np.ndarray                     # (H, W, 3) float image, or an LM
+                                          # (seq_len,) int token vector
+    logits: Optional[np.ndarray] = None   # (num_classes | vocab,) once served
     label: Optional[int] = None
     done: bool = False
 
 
+def _input_contract(cfg):
+    """Per-request payload (shape, numpy dtype) of one config — the serving
+    mirror of ``CompiledModel.input_spec`` minus the batch dim: float images
+    for conv configs, int32 token vectors for LM configs."""
+    if hasattr(cfg, "seq_len"):
+        return (cfg.seq_len,), np.int32
+    return (cfg.img, cfg.img, 3), np.float32
+
+
 def _validate_image(cfg, req: ImageRequest) -> None:
-    """Every compiled executable is fixed-shape, so a mismatched image can
+    """Every compiled executable is fixed-shape, so a mismatched payload can
     never be batched; rejecting at submit keeps the tick loops total.
     Shared by both engines so the input contract has one home."""
-    expect = (cfg.img, cfg.img, 3)
+    expect, _ = _input_contract(cfg)
     shape = tuple(np.shape(req.image))
     if shape != expect:
         raise ValueError(
-            f"request {req.rid}: image shape {shape} does not match the "
+            f"request {req.rid}: payload shape {shape} does not match the "
             f"compiled input shape {expect} for {cfg.name}")
 
 
@@ -207,7 +217,8 @@ class ResNetEngine:
             return False
         reqs = self.queue[:self.batch]
         del self.queue[:len(reqs)]
-        imgs = np.stack([np.asarray(r.image, np.float32) for r in reqs])
+        dtype = _input_contract(self.cfg)[1]
+        imgs = np.stack([np.asarray(r.image, dtype) for r in reqs])
         logits = np.asarray(self.model(imgs))
         for name, shadow in self.shadows.items():
             dev = np.max(np.abs(np.asarray(shadow(imgs)) - logits))
@@ -331,7 +342,8 @@ class ShardedResNetEngine:
             d = self.sched.poll()
             if d is None:
                 break
-            imgs = np.stack([np.asarray(r.payload.image, np.float32)
+            dtype = _input_contract(self.cfg)[1]
+            imgs = np.stack([np.asarray(r.payload.image, dtype)
                              for r in d.requests])
             out = self.pool.run(d.replica.index, imgs)   # async dispatch
             self._in_flight.append((d, out))

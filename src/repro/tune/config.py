@@ -60,6 +60,16 @@ class KernelConfig:
             largest_divisor_leq(cout, self.cout_block)
         return dataclasses.replace(self, batch_tile=bt, cout_block=cb)
 
+    def resolve(self, knob: str, default: int) -> int:
+        """The value of ``knob`` with unset (``None`` or the 0 sentinel)
+        resolved to ``default`` — explicitly, never by truthiness, so a
+        config can legally carry ANY value a space enumerates.  Kernel
+        wrappers must use this instead of ``config.bm or bm``: the ``or``
+        idiom conflates "unset" with every falsy value the tuner might
+        one day emit."""
+        v = getattr(self, knob)
+        return default if v is None or v == 0 else int(v)
+
     def to_dict(self) -> dict:
         """Compact dict: only non-default fields (stable cache format)."""
         out = {}

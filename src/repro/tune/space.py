@@ -139,6 +139,88 @@ def model_space(cfg, batch: int,
     return spaces
 
 
+def matmul_space(M: int, K: int, N: int, acc_init: bool = False,
+                 vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal (bm, bn, bk) MXU tilings for one int8 matmul task: divisor-
+    legal over every grid dim, VMEM-legal per grid step
+    (``dataflow.matmul_task_vmem_bytes``)."""
+    del acc_init   # the acc-init tile is in the footprint unconditionally
+    out = []
+    for bm in divisors(M):
+        for bn in divisors(N):
+            for bk in divisors(K):
+                if dataflow.matmul_task_vmem_bytes(bm, bn, bk) > vmem_budget:
+                    continue
+                out.append(KernelConfig(bm=bm, bn=bn, bk=bk))
+    return out
+
+
+def attention_space(Sq: int, Sk: int, head_dim: int,
+                    vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal (bq, bk) tile pairs for one flash-attention task, carried on
+    the matmul knob names (``bm`` = query tile, ``bk`` = kv tile — the
+    ``kernels.flash_attention.ops.attn_tiles`` mapping)."""
+    out = []
+    for bq in divisors(Sq):
+        for bk in divisors(Sk):
+            if dataflow.attention_task_vmem_bytes(
+                    Sk, head_dim, bq, bk) > vmem_budget:
+                continue
+            out.append(KernelConfig(bm=bq, bk=bk))
+    return out
+
+
+def scan_space(seq_len: int, d_inner: int, ssm_state: int,
+               vmem_budget: int = VMEM_BUDGET) -> List[KernelConfig]:
+    """Legal d_inner blockings (``cout_block`` = the kernel's ``bd`` knob)
+    for one selective-scan task."""
+    out = []
+    for bd in divisors(d_inner):
+        if dataflow.scan_task_vmem_bytes(
+                seq_len, ssm_state, bd) > vmem_budget:
+            continue
+        out.append(KernelConfig(cout_block=bd))
+    return out
+
+
+def lm_model_space(cfg, batch: int,
+                   vmem_budget: int = VMEM_BUDGET
+                   ) -> Dict[str, List[KernelConfig]]:
+    """Per-task legal configs for an LM config (``compile.lm_params.
+    QLMConfig``) at one batch bucket.  Keys match ``lowering.tuning_key``:
+    ``layer{i}/{role}`` for every matmul / attention / scan task of the
+    optimized graph.  Matmul M is the flattened token count
+    (``batch * seq_len``)."""
+    M = batch * cfg.seq_len
+    spaces: Dict[str, List[KernelConfig]] = {}
+    for i in range(cfg.num_layers):
+        if cfg.family == "dense":
+            qkv = cfg.num_heads * cfg.head_dim
+            kv = cfg.num_kv_heads * cfg.head_dim
+            dims = dict(wq=(cfg.d_model, qkv), wk=(cfg.d_model, kv),
+                        wv=(cfg.d_model, kv), wo=(qkv, cfg.d_model),
+                        up=(cfg.d_model, cfg.d_ff),
+                        down=(cfg.d_ff, cfg.d_model))
+            spaces[f"layer{i}/attn"] = attention_space(
+                cfg.seq_len, cfg.seq_len, cfg.head_dim,
+                vmem_budget=vmem_budget)
+        else:
+            dims = dict(wu=(cfg.d_model, cfg.d_inner),
+                        wz=(cfg.d_model, cfg.d_inner),
+                        wdt=(cfg.d_model, cfg.d_inner),
+                        wb=(cfg.d_model, cfg.ssm_state),
+                        wc=(cfg.d_model, cfg.ssm_state),
+                        wo=(cfg.d_inner, cfg.d_model))
+            spaces[f"layer{i}/scan"] = scan_space(
+                cfg.seq_len, cfg.d_inner, cfg.ssm_state,
+                vmem_budget=vmem_budget)
+        for role, (din, dout) in dims.items():
+            spaces[f"layer{i}/{role}"] = matmul_space(
+                M, din, dout, acc_init=role in ("wo", "down"),
+                vmem_budget=vmem_budget)
+    return spaces
+
+
 def space_size(spaces: Dict[str, List[KernelConfig]]) -> int:
     """Cardinality of the joint design space (product over tasks) — what an
     exhaustive search would have to time on device."""

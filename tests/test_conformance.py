@@ -184,3 +184,138 @@ def test_single_image_matches_row_of_batch(matrix, arch):
     equals image 0 served inside the full batch (padding invariance)."""
     _, outs = matrix(arch, "default", "pallas")
     np.testing.assert_array_equal(outs[1][0], outs[5][0])
+
+
+# ---------------------------------------------------------------------------
+# LM matrix: the generic graph->task compiler's transformer / SSM rows.
+# Same contract as the conv matrix — pallas vs lax-int bit-exact over
+# {default, tuned} x every bucket/pad/chunk path — over the two LM families
+# the compiler lowers (decoder-only transformer, Mamba1 SSM).
+# ---------------------------------------------------------------------------
+
+from repro.compile import init_lm_params, lm_config          # noqa: E402
+from repro.configs.base import get_smoke_config              # noqa: E402
+
+LM_SEQ = 8
+LM_CFGS = {"transformer": "gemma-2b", "ssm": "falcon-mamba-7b"}
+
+
+def lm_tuned_variant(cfg):
+    """Deliberately non-default but always-legal LM tilings: small matmul
+    tiles everywhere (snapped to divisors at the kernel boundary), a split
+    attention tile pair, a split scan d_inner block."""
+    tuning = {}
+    for i in range(cfg.num_layers):
+        if cfg.family == "dense":
+            for role in ("wq", "wk", "wv", "wo", "up", "down"):
+                tuning[f"layer{i}/{role}"] = dict(bm=8, bn=16, bk=16)
+            tuning[f"layer{i}/attn"] = dict(bm=4, bk=4)
+        else:
+            for role in ("wu", "wz", "wdt", "wb", "wc", "wo"):
+                tuning[f"layer{i}/{role}"] = dict(bm=8, bn=16, bk=16)
+            tuning[f"layer{i}/scan"] = dict(cout_block=16)
+    return tuning
+
+
+LM_VARIANTS = {"default": lambda cfg: None, "tuned": lm_tuned_variant}
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    out = {}
+    for family, name in LM_CFGS.items():
+        cfg = lm_config(get_smoke_config(name), seq_len=LM_SEQ)
+        out[family] = (cfg, init_lm_params(cfg, seed=7))
+    return out
+
+
+@pytest.fixture(scope="module")
+def lm_tokens(lm_setup):
+    rng = np.random.default_rng(13)
+    return {family: rng.integers(0, cfg.vocab_size,
+                                 (N_IMAGES, cfg.seq_len)).astype(np.int32)
+            for family, (cfg, _) in lm_setup.items()}
+
+
+@pytest.fixture(scope="module")
+def lm_matrix(lm_setup, lm_tokens):
+    cache = {}
+
+    def cell(family, variant, backend):
+        k = (family, variant, backend)
+        if k not in cache:
+            cfg, params = lm_setup[family]
+            cm = compile_model(cfg, params, backend=backend,
+                               batch_sizes=BUCKETS,
+                               tune=LM_VARIANTS[variant](cfg))
+            toks = lm_tokens[family]
+            outs = {n: np.asarray(cm(toks[:n])) for n in BATCHES}
+            cache[k] = (cm, outs)
+        return cache[k]
+
+    return cell
+
+
+@pytest.mark.parametrize("n", BATCHES)
+@pytest.mark.parametrize("variant", list(LM_VARIANTS))
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_pallas_bit_exact_with_lax_int(lm_matrix, family, variant, n):
+    """The pallas LM task program (matmul_int8 / flash_attention /
+    selective_scan kernels) and its lax mirror must agree bit for bit at
+    every bucket/pad/chunk path and every tiling, for both families."""
+    _, pallas = lm_matrix(family, variant, "pallas")
+    _, lax = lm_matrix(family, variant, "lax-int")
+    np.testing.assert_array_equal(pallas[n], lax[n])
+
+
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_logits_shape_and_finite(lm_matrix, family, lm_setup):
+    cfg, _ = lm_setup[family]
+    _, outs = lm_matrix(family, "default", "pallas")
+    assert outs[3].shape == (3, cfg.vocab_size)
+    assert np.isfinite(outs[3]).all()
+
+
+@pytest.mark.parametrize("variant", list(LM_VARIANTS))
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_no_retracing(lm_matrix, family, variant):
+    """The LM buckets obey the same AOT discipline as the conv pipeline:
+    one trace per bucket across the whole batch sweep."""
+    cm, _ = lm_matrix(family, variant, "pallas")
+    assert sorted(cm._execs) == sorted(BUCKETS)
+    assert all(v == 1 for v in cm.trace_counts.values())
+
+
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_tuned_config_actually_differs(lm_matrix, family):
+    cm_t, _ = lm_matrix(family, "tuned", "pallas")
+    assert cm_t.tuning, "tuned variant lost its tuning"
+
+
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_single_sequence_matches_row_of_batch(lm_matrix, family):
+    """Padding/chunk invariance for token batches.  Same-bucket is bitwise:
+    sequence 0 through the full bucket equals sequence 0 through the
+    chunked+padded path (both run the bucket-3 executable).  ACROSS buckets
+    the guarantee is float-tolerance only: the attention/scan interludes are
+    float, and XLA fuses them differently per bucket shape — unlike the
+    all-integer conv pipeline, bitwise equality across bucket sizes is not
+    part of the LM contract (cross-BACKEND bit-exactness at equal shape
+    is, and is pinned above)."""
+    _, outs = lm_matrix(family, "default", "pallas")
+    np.testing.assert_array_equal(outs[3][0], outs[5][0])
+    np.testing.assert_allclose(outs[1][0], outs[5][0],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("family", list(LM_CFGS))
+def test_lm_pallas_stream_delegates_bit_exact(lm_matrix, lm_setup,
+                                              lm_tokens, family):
+    """pallas-stream has no LM megakernel; it must degrade to the per-task
+    pallas kernels and stay bit-exact with them."""
+    cfg, params = lm_setup[family]
+    cm = compile_model(cfg, params, backend="pallas-stream",
+                       batch_sizes=BUCKETS)
+    _, pallas = lm_matrix(family, "default", "pallas")
+    np.testing.assert_array_equal(
+        np.asarray(cm(lm_tokens[family][:3])), pallas[3])

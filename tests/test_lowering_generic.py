@@ -1,0 +1,204 @@
+"""Unit tests for the generic graph->task compiler.
+
+Pins the three contracts the registry refactor introduced:
+
+  * **topological-sort determinism** — the same node list always lowers to
+    the same task sequence, and ANY permutation of the node list still
+    yields a valid order and identical logits (the walk follows the sorted
+    order, never the raw list order);
+  * **registry dispatch** — node kinds resolve through
+    ``lowering.TASK_HANDLERS`` / ``backends._TASK_IMPLS``; unknown kinds
+    fail loudly, naming the node and its kind;
+  * **diagnosable strictness** — every LoweringError on the LM path carries
+    the node id, its kind, and the failed check.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.compile import (
+    LoweringError, init_lm_params, lm_config, lower_lm, plan_lm)
+from repro.compile import lowering
+from repro.configs.base import get_smoke_config
+
+SEQ = 8
+
+
+@pytest.fixture(scope="module")
+def tf_setup():
+    cfg = lm_config(get_smoke_config("gemma-2b"), seq_len=SEQ)
+    return cfg, init_lm_params(cfg, seed=3)
+
+
+@pytest.fixture(scope="module")
+def ssm_setup():
+    cfg = lm_config(get_smoke_config("falcon-mamba-7b"), seq_len=SEQ)
+    return cfg, init_lm_params(cfg, seed=3)
+
+
+# -- topological sort -------------------------------------------------------
+
+
+def test_topo_sort_deterministic(tf_setup):
+    cfg, _ = tf_setup
+    g = lowering.optimized_graph(cfg)
+    a = [n.name for n in G.topological_sort(g)]
+    b = [n.name for n in G.topological_sort(g)]
+    assert a == b
+    assert len(a) == len(g.nodes)
+
+
+def test_topo_sort_valid_under_permutation(tf_setup):
+    cfg, _ = tf_setup
+    g = lowering.optimized_graph(cfg)
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        perm = list(g.nodes)
+        rng.shuffle(perm)
+        shuffled = G.Graph(perm)
+        order = G.topological_sort(shuffled)
+        pos = {n.name: i for i, n in enumerate(order)}
+        prod = shuffled.producers()
+        for n in order:
+            for t in n.inputs:
+                p = prod.get(t)
+                if p is not None and p.name != n.name:
+                    assert pos[p.name] < pos[n.name], \
+                        f"{p.name} must precede {n.name}"
+
+
+def test_shuffled_graph_lowers_to_identical_logits(tf_setup):
+    """Node-list order is presentation, not semantics: a shuffled optimized
+    graph must produce bit-identical logits through the same backend."""
+    cfg, params = tf_setup
+    g = lowering.optimized_graph(cfg)
+    rng = np.random.default_rng(9)
+    toks = rng.integers(0, cfg.vocab_size, (2, SEQ)).astype(np.int32)
+    ref = np.asarray(lower_lm("lax-int", g, cfg, params)(toks))
+
+    perm = list(g.nodes)
+    rng.shuffle(perm)
+    shuffled = G.Graph(perm)
+    out = np.asarray(lower_lm("lax-int", shuffled, cfg, params)(toks))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_topo_sort_raises_on_cycle():
+    g = G.Graph([G.Node("a", "matmul", ["t_b"], ["t_a"]),
+                 G.Node("b", "matmul", ["t_a"], ["t_b"])])
+    with pytest.raises(ValueError, match="cycle"):
+        G.topological_sort(g)
+
+
+# -- registry dispatch ------------------------------------------------------
+
+
+def test_unregistered_kind_names_node_and_kind(tf_setup):
+    cfg, params = tf_setup
+    g = lowering.optimized_graph(cfg)
+    g.nodes[3] = G.Node(g.nodes[3].name, "mystery-op",
+                        g.nodes[3].inputs, g.nodes[3].outputs,
+                        g.nodes[3].attrs)
+    with pytest.raises(LoweringError) as exc:
+        plan_lm(g, params)
+    msg = str(exc.value)
+    assert g.nodes[3].name in msg and "mystery-op" in msg
+    assert "no lowering handler" in msg
+
+
+def test_custom_kind_registers_and_dispatches(tf_setup):
+    """A new node kind plugs in through register_task without touching the
+    walk; re-registration is latest-wins and reversible."""
+    cfg, params = tf_setup
+    seen = []
+
+    @lowering.register_task("custom-probe")
+    def _probe(n, state):
+        seen.append(n.name)
+
+    try:
+        g = lowering.optimized_graph(cfg)
+        g.nodes.append(G.Node("probe0", "custom-probe", ["logits"], []))
+        plan_lm(g, params)
+        assert seen == ["probe0"]
+    finally:
+        del lowering.TASK_HANDLERS["custom-probe"]
+
+
+def test_backend_impl_registry_unknown_kind():
+    from repro.compile import get_task_impl
+
+    with pytest.raises(LoweringError, match="no impl"):
+        get_task_impl("pallas", "mystery-kind")
+
+
+# -- plan_lm strictness / error-message contract ----------------------------
+
+
+def test_plan_lm_unoptimized_graph_names_node(tf_setup):
+    cfg, params = tf_setup
+    g = lowering.model_graph(cfg)   # adds + relu still present
+    with pytest.raises(LoweringError, match="optimize") as exc:
+        plan_lm(g, params)
+    msg = str(exc.value)
+    assert "node " in msg and "kind=" in msg
+
+
+def test_plan_lm_matmul_without_role(tf_setup):
+    cfg, params = tf_setup
+    g = lowering.optimized_graph(cfg)
+    mm = next(n for n in g.nodes if n.op == "matmul")
+    mm.attrs.pop("role")
+    with pytest.raises(LoweringError) as exc:
+        plan_lm(g, params)
+    msg = str(exc.value)
+    assert mm.name in msg and "kind=matmul" in msg and "role" in msg
+
+
+def test_plan_lm_attention_arity_check(tf_setup):
+    cfg, params = tf_setup
+    g = lowering.optimized_graph(cfg)
+    att = next(n for n in g.nodes if n.op == "attention")
+    att.inputs = att.inputs[:2]
+    with pytest.raises(LoweringError) as exc:
+        plan_lm(g, params)
+    msg = str(exc.value)
+    assert att.name in msg and "kind=attention" in msg
+
+
+def test_plan_lm_params_shape_cross_check(tf_setup, ssm_setup):
+    tf_cfg, _ = tf_setup
+    _, ssm_params = ssm_setup
+    g = lowering.optimized_graph(tf_cfg)
+    # transformer graph against SSM params: the (layer, role) binding fails
+    with pytest.raises((LoweringError, KeyError)):
+        plan_lm(g, ssm_params)
+
+
+def test_plan_lm_task_order_and_kinds(tf_setup, ssm_setup):
+    """The plan is the topological task program: per transformer layer
+    q/k/v -> attention -> wo -> up -> down; per SSM layer the five
+    projections -> scan -> wo.  Residual folds land on wo/down."""
+    tf_cfg, tf_params = tf_setup
+    plan = plan_lm(lowering.optimized_graph(tf_cfg), tf_params)
+    l0 = [t for t in plan.tasks if t.layer == 0]
+    kinds = [t.kind for t in l0]
+    assert kinds == ["matmul"] * 3 + ["attention"] + ["matmul"] * 3
+    by_role = {getattr(t, "role", "attn"): t for t in l0}
+    assert by_role["wo"].skip is not None      # post-attn residual fold
+    assert by_role["down"].skip is not None    # MLP residual fold
+    assert by_role["up"].fused_relu            # merged ReLU
+
+    ssm_cfg, ssm_params = ssm_setup
+    plan = plan_lm(lowering.optimized_graph(ssm_cfg), ssm_params)
+    l0 = [t for t in plan.tasks if t.layer == 0]
+    assert [t.kind for t in l0] == ["matmul"] * 5 + ["scan", "matmul"]
+    assert l0[-1].skip is not None             # block residual fold on wo
+
+
+def test_tuning_key_covers_all_kinds(tf_setup):
+    cfg, _ = tf_setup
+    g = lowering.optimized_graph(cfg)
+    keys = {lowering.tuning_key(n) for n in g.nodes} - {None}
+    assert f"layer0/wq" in keys and f"layer0/attn" in keys
+    assert f"layer{cfg.num_layers - 1}/down" in keys
