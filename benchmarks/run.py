@@ -38,7 +38,10 @@ machine (tests/test_bench_repro.py pins this).  Benchmarks:
   * e2e_slo         — trace-driven SLO serving (``repro.traffic``): a seeded
                       bursty trace simulated in virtual time against 1 vs N
                       replicas with degradation A/B'd on/off — per-class
-                      deadline-hit-rate + effective accuracy under load
+                      deadline-hit-rate + effective accuracy under load —
+                      plus the obs-driven control loop (``repro.obs.health``)
+                      A/B'd against the queue-signal baseline on an
+                      EWMA-adversarial trickle/burst trace
                       (deterministic; only real wall time is VOLATILE)
   * overhead_obs    — the cost of observability: the same compiled ResNet8
                       executable interleave-timed with the ``repro.obs``
@@ -526,6 +529,99 @@ def e2e_slo():
              wall_s=round(wall, 3))
     finally:
         obsrt.install(prior)
+
+    # health arm: the obs-driven control loop vs the queue-signal baseline.
+    # A trickle/burst trace is adversarial for the predictive router: each
+    # trickle phase trains the scheduler's EWMA service estimate on cheap
+    # singleton batches, so at the next burst front the primary is
+    # under-priced and degrade-class requests are admitted primary just
+    # before the backlog lands.  The SLO burn-rate alert's fast window (1 s)
+    # is longer than the 0.23 s cycle, so it stays active across bursts and
+    # the actuated arm degrades those requests pre-emptively.  Three runs
+    # over the identical trace and identical compiled models: queue-signal
+    # baseline, observe-only (alerts recorded, routing untouched — served
+    # logits must be bit-identical with the baseline), and alert-actuated
+    # (strictly higher standard-class hit rate, the control-loop
+    # acceptance).  Alert logs are FakeClock-timestamped JSONL, so their
+    # hashes sit in the digest.
+    from repro.compile import compile_model
+    from repro.obs import HealthMonitor, default_rules
+    from repro.traffic import parse_classes
+    from repro.traffic.loadgen import Arrival
+
+    h_classes = parse_classes("standard:25:1:degrade")
+    hrng = nprng()
+    h_arrivals, tc = [], 0.0
+    for _ in range(6):
+        t = tc
+        while t < tc + 0.15:            # trickle: the EWMA decays
+            h_arrivals.append(Arrival(t=t, slo="standard"))
+            t += hrng.exponential(1.0 / 60.0)
+        t = tc + 0.15
+        while t < tc + 0.23:            # burst: ~6x primary capacity
+            h_arrivals.append(Arrival(t=t, slo="standard"))
+            t += hrng.exponential(1.0 / 2500.0)
+        tc += 0.23
+    h_svc = {"resnet20": ServiceModel.from_fps(400.0),
+             "resnet8": ServiceModel.from_fps(30000.0)}
+    models = {name: compile_model(cfg, qp, backend="lax-int",
+                                  batch_sizes=(8,))
+              for name, (cfg, qp) in variants.items()}
+
+    def health_arm(mode):
+        clock = FakeClock()
+        prior = obsrt.disable()
+        try:
+            health = None
+            if mode != "base":
+                ob = obsrt.instrument(clock=clock)
+                health = HealthMonitor(
+                    ob, rules=default_rules(["standard"], objective=0.99),
+                    interval_s=0.01)
+                ob.health = health
+            servers = {
+                name: SimServer(name, h_svc[name], clock, replicas=1,
+                                max_batch=8, model=models[name])
+                for name in ("resnet20", "resnet8")}
+            router = OverloadRouter(
+                h_classes, primary="resnet20", degraded="resnet8",
+                health=health if mode == "act" else None)
+            sim = TrafficSim(servers, h_classes, router, clock,
+                             health=health)
+            t0 = time.perf_counter()
+            rep = sim.run(h_arrivals, images=images)
+            wall = time.perf_counter() - t0
+            logits = np.stack([r.logits for r in sim.requests
+                               if r.logits is not None])
+            log = health.alert_log_jsonl() if health else ""
+            summ = health.summary() if health else {}
+            return rep, logits, log, summ, wall
+        finally:
+            obsrt.install(prior)
+
+    base_rep, base_logits, _, _, base_wall = health_arm("base")
+    obs_rep, obs_logits, obs_log, obs_summ, obs_wall = health_arm("obs")
+    act_rep, act_logits, act_log, act_summ, act_wall = health_arm("act")
+    hit_base = base_rep["classes"]["standard"]["deadline_hit_rate"]
+    hit_obs = obs_rep["classes"]["standard"]["deadline_hit_rate"]
+    hit_act = act_rep["classes"]["standard"]["deadline_hit_rate"]
+    wall = base_wall + obs_wall + act_wall
+    emit("e2e_slo/health", wall * 1e6,
+         arrivals=len(h_arrivals),
+         hit_standard_base=hit_base,
+         hit_standard_obs=hit_obs,
+         hit_standard_health=hit_act,
+         health_gain=round(hit_act - hit_base, 6),
+         bit_identical=bool(np.array_equal(base_logits, obs_logits)),
+         degraded_base=base_rep["classes"]["standard"]["degraded"],
+         degraded_health=act_rep["classes"]["standard"]["degraded"],
+         alerts_obs=obs_summ.get("alerts", 0),
+         alerts_health=act_summ.get("alerts", 0),
+         burn_alerts_health=act_summ.get("by_rule", {}).get(
+             "burn_rate:standard", 0),
+         alert_log_sha=hashlib.sha256(obs_log.encode()).hexdigest()[:12],
+         alert_log_sha_act=hashlib.sha256(act_log.encode()).hexdigest()[:12],
+         wall_s=round(wall, 3))
 
 
 def overhead_obs():

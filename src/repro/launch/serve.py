@@ -96,6 +96,27 @@ def serve_resnet_sharded(args, cfg, qp, buckets):
           f"{[r['served'] for r in st['replicas']]}")
 
 
+def _make_launch_health(args, classes=None):
+    """HealthMonitor on the active obs session when --alerts/--bundle-dir/
+    --health-actuate is set (observe-only unless --health-actuate)."""
+    if not (args.alerts or args.bundle_dir or args.health_actuate):
+        return None
+    from repro.obs import runtime as _obsrt
+    from repro.obs import FlightRecorder, HealthMonitor, default_rules
+    ob = _obsrt.active()
+    if ob is None:
+        return None
+    rec = FlightRecorder()
+    rec.attach(ob.trace)
+    names = [c.name for c in classes] if classes else None
+    health = HealthMonitor(ob, rules=default_rules(names),
+                           recorder=rec, bundle_dir=args.bundle_dir or None)
+    health.census_extra.update(arch=args.arch, backend=args.backend,
+                               batch=args.batch, seed=args.seed)
+    ob.health = health
+    return health
+
+
 def serve_resnet_traffic(args, cfg, qp, buckets):
     """Trace-driven SLO serving via ``repro.traffic``: the live runner over
     ``ShardedResNetEngine`` replicas, with per-class deadline accounting,
@@ -131,18 +152,21 @@ def serve_resnet_traffic(args, cfg, qp, buckets):
             slack_ms=args.slack_ms)
     for eng in variants.values():
         eng.pool.warmup()
+    health = _make_launch_health(args, classes)
+    actuating = health if args.health_actuate else None
     autoscaler = None
     if args.autoscale:
         autoscaler = Autoscaler(
             AutoscaleConfig(min_replicas=1, max_replicas=replicas),
-            clock=variants[args.arch].clock)
+            clock=variants[args.arch].clock, health=actuating)
         variants[args.arch].set_active_replicas(autoscaler.active)
     router = OverloadRouter(classes, primary=args.arch,
-                            degraded=args.degrade_arch or None)
+                            degraded=args.degrade_arch or None,
+                            health=actuating)
     rng = np.random.default_rng(args.seed)
     images = rng.random((64, cfg.img, cfg.img, 3)).astype(np.float32)
     runner = LiveTrafficRunner(variants, classes, router,
-                               autoscaler=autoscaler)
+                               autoscaler=autoscaler, health=health)
     report = runner.run(arrivals, images)
     print(f"served trace of {len(arrivals)} arrivals through "
           f"{list(variants)} (replicas={replicas}, "
@@ -160,21 +184,45 @@ def serve_resnet(args):
     buckets = tuple(int(b) for b in args.buckets.split(",")) if args.buckets \
         else (args.batch,)
     ob = None
-    if args.trace_out or args.metrics_out:
+    if args.trace_out or args.metrics_out or args.alerts \
+            or args.bundle_dir or args.health_actuate:
         from repro import obs as _o
         ob = _o.instrument()     # engines run on the same monotonic domain
     try:
         if args.trace or args.slo_classes or args.autoscale:
             return serve_resnet_traffic(args, cfg, qp, buckets)
+        # single/sharded paths have no event loop: the monitor (if asked
+        # for) is ticked once after the run, in the finally block below
+        _make_launch_health(args)
         if args.replicas:
             return serve_resnet_sharded(args, cfg, qp, buckets)
         return _serve_resnet_single(args, cfg, qp, buckets)
     finally:
         if ob is not None:
             from repro import obs as _o
+            if ob.health is not None and ob.health.ticks == 0:
+                # non-traffic paths have no event loop: one final tick
+                # evaluates the rules (the A/B bit-exactness sentinel in
+                # particular) over the finished run
+                ob.health.tick(ob.now())
             written = _o.export(ob, trace_out=args.trace_out or None,
                                 metrics_out=args.metrics_out or None)
             _o.disable()
+            if ob.health is not None:
+                import os as _os
+                from repro.obs import alert_log_path
+                if args.bundle_dir:
+                    _os.makedirs(args.bundle_dir, exist_ok=True)
+                    log = _os.path.join(args.bundle_dir, "alerts.jsonl")
+                    ob.health.write_alert_log(log)
+                    written["alerts"] = log
+                if args.metrics_out:
+                    log = alert_log_path(args.metrics_out)
+                    ob.health.write_alert_log(log)
+                    written["alerts"] = log
+                h = ob.health.summary()
+                print(f"health: {h['alerts']} alerts {h['by_rule']}, "
+                      f"{len(h['bundles'])} bundles")
             for kind, path in sorted(written.items()):
                 print(f"wrote {kind} to {path}")
 
@@ -260,7 +308,17 @@ def main():
                          "serving run (repro.obs; load in Perfetto)")
     ap.add_argument("--metrics-out", default="",
                     help="resnet: write Prometheus-style metrics text "
-                         "(repro.obs)")
+                         "(repro.obs); the alert log lands next to it "
+                         "when alerting is on")
+    ap.add_argument("--alerts", action="store_true",
+                    help="resnet: run the repro.obs.health alert engine "
+                         "(passive; see docs/observability.md)")
+    ap.add_argument("--bundle-dir", default="",
+                    help="resnet: dump debug bundles here on alert or "
+                         "missed-deadline drain (implies --alerts)")
+    ap.add_argument("--health-actuate", action="store_true",
+                    help="resnet: let active alerts drive the autoscaler "
+                         "and overload router (implies --alerts)")
     ap.add_argument("--tune", default="",
                     choices=("", "auto", "analytic", "device"),
                     help="resnet: kernel autotuning — 'auto' serves from the "

@@ -8,6 +8,12 @@ Three pieces, one switch:
   exported as Chrome ``trace_event`` JSON (Perfetto) or JSONL.
 * :mod:`repro.obs.profile` — per-task kernel wall timing paired with the
   modeled HBM/VMEM bytes from ``core.dataflow`` (lazy-imports jax).
+* :mod:`repro.obs.health` — deterministic SLO burn-rate/anomaly alert
+  rules evaluated over the live registry, plus the control-loop signals
+  the autoscaler/router can subscribe to.
+* :mod:`repro.obs.recorder` / :mod:`repro.obs.bundle` — flight-recorder
+  rings of recent spans + metric deltas, frozen into self-contained
+  debug bundles on alert, drain-with-missed-deadlines, or demand.
 
 Nothing records unless :func:`instrument` has installed a session — every
 call site in ``serve``/``compile``/``tune``/``traffic`` checks
@@ -21,6 +27,13 @@ from repro.obs.trace import (                          # noqa: F401
 from repro.obs.runtime import (                        # noqa: F401
     Observability, active, install, instrument, disable, instrumented,
     export)
+from repro.obs.health import (                         # noqa: F401
+    Alert, Rule, BurnRateRule, QueueGrowthRule, LatencyBandRule,
+    RetraceStormRule, BitExactSentinel, default_rules, HealthMonitor,
+    alert_log_path)
+from repro.obs.recorder import FlightRecorder          # noqa: F401
+from repro.obs.bundle import (                         # noqa: F401
+    write_bundle, read_bundle, assemble_bundle)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT_BUCKETS",
@@ -28,6 +41,10 @@ __all__ = [
     "strip_volatile_events",
     "Observability", "active", "install", "instrument", "disable",
     "instrumented", "export",
+    "Alert", "Rule", "BurnRateRule", "QueueGrowthRule", "LatencyBandRule",
+    "RetraceStormRule", "BitExactSentinel", "default_rules",
+    "HealthMonitor", "alert_log_path",
+    "FlightRecorder", "write_bundle", "read_bundle", "assemble_bundle",
     # lazy (imports jax): profile_tasks, TaskProfile, REFERENCE_HBM_GBPS
 ]
 

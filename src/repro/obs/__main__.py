@@ -1,16 +1,27 @@
 """``python -m repro.obs`` — render a text report from exported artifacts.
 
 Reads the files the instrumented CLIs write (``--trace-out`` Chrome
-``trace_event`` JSON, ``--metrics-out`` Prometheus text) and prints a
-summary: event/track counts, the top-N slowest spans, kernel-profile rows
-with their measured-vs-roofline ratios, and the metric series.  CI's
-obs-smoke step runs this against the artifacts it just produced — a parse
-failure fails the build, so the export formats cannot drift silently.
+``trace_event`` JSON, ``--metrics-out`` Prometheus text, ``--alerts``
+alert-log JSONL or a debug-bundle directory) and prints a summary:
+event/track counts, the top-N slowest spans, kernel-profile rows with
+their measured-vs-roofline ratios, metric series, and the alert history.
+CI's obs-smoke and alert-smoke steps run this against the artifacts they
+just produced — a parse failure fails the build, so the export formats
+cannot drift silently.
+
+Subcommand ``dump`` assembles a debug bundle offline from already-
+exported artifacts:
+
+    python -m repro.obs dump --trace t.json --metrics m.txt --out bundles/
+
+Gate flag ``--assert-no-alerts`` exits nonzero when the alert log is
+non-empty — the CI-friendly way to pin "this run stayed healthy".
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import List, Optional
 
@@ -34,6 +45,18 @@ def load_chrome_trace(path: str) -> List[dict]:
         if e["ph"] in ("X", "i") and "ts" not in e:
             raise ValueError(f"{path}: event {i} has no timestamp: {e!r}")
     return events
+
+
+def load_alerts(path: str) -> List[dict]:
+    """Load an alert log: either an ``alerts.jsonl`` file or a debug-
+    bundle directory (whose ``alerts.jsonl`` is read)."""
+    from repro.obs.bundle import read_alert_lines
+    if os.path.isdir(path):
+        inner = os.path.join(path, "alerts.jsonl")
+        if not os.path.isfile(inner):
+            raise ValueError(f"{path}: directory has no alerts.jsonl")
+        return read_alert_lines(inner)
+    return read_alert_lines(path)
 
 
 def _track_names(events: List[dict]) -> dict:
@@ -98,21 +121,91 @@ def report_metrics(parsed: dict, max_series: int = 40) -> str:
     return "\n".join(lines)
 
 
+def report_alerts(alerts: List[dict], max_alerts: int = 20) -> str:
+    if not alerts:
+        return "alerts: none"
+    by_rule: dict = {}
+    for a in alerts:
+        by_rule[a["rule"]] = by_rule.get(a["rule"], 0) + 1
+    lines = [f"alerts: {len(alerts)} fired "
+             f"({', '.join(f'{r}={by_rule[r]}' for r in sorted(by_rule))})"]
+    for a in alerts[:max_alerts]:
+        lines.append(f"  t={a['t']:.4f} [{a['severity']}] "
+                     f"{a['rule']}: {a['message']}")
+    if len(alerts) > max_alerts:
+        lines.append(f"  ... ({len(alerts) - max_alerts} more)")
+    return "\n".join(lines)
+
+
+def report_bundle(bundle: dict) -> str:
+    m = bundle["manifest"]
+    lines = [f"bundle: reason={m['reason']} t={m['t']:.4f} "
+             f"seq={m['seq']} files={len(m['files'])}"]
+    servers = (m.get("census") or {}).get("servers") or {}
+    for name in sorted(servers):
+        s = servers[name]
+        lines.append(f"  server {name}: pending={s.get('pending')} "
+                     f"in_flight={s.get('in_flight')} "
+                     f"active={s.get('active_replicas')}/"
+                     f"{s.get('replicas')}")
+    rec = m.get("recorder")
+    if rec:
+        lines.append(f"  recorder: {rec.get('events')} events "
+                     f"({rec.get('dropped_events')} evicted), "
+                     f"{rec.get('metric_samples')} metric samples")
+    return "\n".join(lines)
+
+
+def _cmd_dump(args) -> int:
+    from repro.obs.bundle import assemble_bundle
+    if not (args.trace or args.metrics or args.alerts):
+        print("error: dump needs at least one of --trace/--metrics/--alerts",
+              file=sys.stderr)
+        return 1
+    try:
+        path = assemble_bundle(args.out, trace_path=args.trace,
+                               metrics_path=args.metrics,
+                               alerts_path=args.alerts, reason=args.reason)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    print(f"bundle written: {path}")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs",
         description="Summarize exported observability artifacts.")
+    ap.add_argument("cmd", nargs="?", choices=["dump"],
+                    help="optional subcommand: 'dump' assembles a debug "
+                         "bundle from exported artifacts")
     ap.add_argument("--trace", help="Chrome trace_event JSON (--trace-out)")
     ap.add_argument("--metrics", help="Prometheus text file (--metrics-out)")
+    ap.add_argument("--alerts",
+                    help="alert log (.alerts.jsonl) or bundle directory")
+    ap.add_argument("--bundle", help="debug-bundle directory to summarize")
+    ap.add_argument("--assert-no-alerts", action="store_true",
+                    help="exit 1 if the alert log contains any alert")
     ap.add_argument("--top", type=int, default=10,
                     help="slowest spans to list (default 10)")
+    ap.add_argument("--out", default="bundles",
+                    help="dump: output directory (default: bundles)")
+    ap.add_argument("--reason", default="manual",
+                    help="dump: bundle reason label (default: manual)")
     ap.add_argument("--json", dest="json_out",
                     help="also write the parsed summary as JSON")
     args = ap.parse_args(argv)
-    if not args.trace and not args.metrics:
-        ap.error("nothing to report: pass --trace and/or --metrics")
+
+    if args.cmd == "dump":
+        return _cmd_dump(args)
+
+    if not (args.trace or args.metrics or args.alerts or args.bundle):
+        ap.error("nothing to report: pass --trace, --metrics, --alerts "
+                 "and/or --bundle")
 
     summary = {}
+    alerts: List[dict] = []
     try:
         if args.trace:
             events = load_chrome_trace(args.trace)
@@ -123,6 +216,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                 parsed = parse_text(f.read())
             print(report_metrics(parsed))
             summary["metrics"] = len(parsed)
+        if args.bundle:
+            from repro.obs.bundle import read_bundle
+            bundle = read_bundle(args.bundle)
+            print(report_bundle(bundle))
+            summary["bundle_files"] = len(bundle["manifest"]["files"])
+            if not args.alerts:
+                alerts = bundle["alerts"]
+                print(report_alerts(alerts))
+                summary["alerts"] = len(alerts)
+        if args.alerts:
+            alerts = load_alerts(args.alerts)
+            print(report_alerts(alerts))
+            summary["alerts"] = len(alerts)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 1
@@ -130,6 +236,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         with open(args.json_out, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
             f.write("\n")
+    if args.assert_no_alerts and alerts:
+        print(f"error: --assert-no-alerts but {len(alerts)} alerts fired",
+              file=sys.stderr)
+        return 1
     return 0
 
 

@@ -26,7 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs import runtime as _obs
 from repro.serve import sched as S
+
+# backends whose logits must agree BITWISE with each other: a nonzero A/B
+# deviation between two of these is an arithmetic bug, not quantization
+# error, and trips the health monitor's bit-exactness sentinel.  The float
+# shadow legitimately deviates and never counts as a mismatch.
+_INT_BACKENDS = frozenset({"pallas", "pallas-stream", "lax-int", "int"})
 
 
 @dataclasses.dataclass
@@ -223,6 +230,20 @@ class ResNetEngine:
         for name, shadow in self.shadows.items():
             dev = np.max(np.abs(np.asarray(shadow(imgs)) - logits))
             self.ab_stats[name].append(float(dev))
+            ob = _obs.active()
+            if ob is not None:
+                ob.metrics.counter(
+                    "ab_checks_total", "A/B shadow replays").inc(shadow=name)
+                ob.metrics.gauge(
+                    "ab_max_abs_dev",
+                    "last max |shadow - primary| logit deviation").set(
+                        float(dev), shadow=name)
+                if dev > 0 and self.backend in _INT_BACKENDS \
+                        and name in _INT_BACKENDS:
+                    ob.metrics.counter(
+                        "ab_mismatch_total",
+                        "integer shadow disagreed bitwise with primary").inc(
+                            shadow=name)
         for i, r in enumerate(reqs):
             r.logits = logits[i]
             r.label = int(np.argmax(logits[i]))

@@ -567,6 +567,9 @@ class Scheduler:
             ob.metrics.counter(
                 "sched_drained_dispatches_total",
                 "dispatches flushed by drain()").inc(n)
+            if missed and ob.health is not None:
+                # drain finished late: freeze a post-mortem debug bundle
+                ob.health.on_drain(missed, dispatches=n)
         return DrainResult(n, missed)
 
     def summary(self) -> dict:

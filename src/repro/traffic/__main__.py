@@ -92,6 +92,29 @@ def _eval_data(args):
     return images, labels, acc
 
 
+def _make_health(args, classes):
+    """Build the HealthMonitor (+ flight recorder) on the active obs
+    session when any alerting flag is set.  Returns None otherwise."""
+    if not (args.alerts or args.bundle_dir or args.health_actuate):
+        return None
+    from repro.obs import runtime as _obsrt
+    from repro.obs import FlightRecorder, HealthMonitor, default_rules
+    ob = _obsrt.active()
+    if ob is None:                      # pragma: no cover - main() instruments
+        return None
+    rec = FlightRecorder()
+    rec.attach(ob.trace)
+    health = HealthMonitor(
+        ob, rules=default_rules([c.name for c in classes]),
+        interval_s=args.health_interval_ms * 1e-3, recorder=rec,
+        bundle_dir=args.bundle_dir or None)
+    health.census_extra.update(
+        arch=args.arch, degrade_arch=args.degrade_arch or None,
+        backend=args.backend, batch=args.batch, seed=args.seed)
+    ob.health = health
+    return health
+
+
 def run_sim(args, classes, arrivals):
     clock = FakeClock()
     from repro.obs import runtime as _obsrt
@@ -99,6 +122,7 @@ def run_sim(args, classes, arrivals):
         # bind the obs session to the sim's virtual clock: every span and
         # metric then lives in deterministic FakeClock time
         _obsrt.active().set_clock(clock)
+    health = _make_health(args, classes)
     images, labels, acc = _eval_data(args)
     models = {}
     if not args.no_model:
@@ -112,10 +136,12 @@ def run_sim(args, classes, arrivals):
                                          batch_sizes=(args.batch,))
     autoscaler = None
     active = args.replicas
+    actuating = health if args.health_actuate else None
     if args.autoscale:
         autoscaler = Autoscaler(AutoscaleConfig(
             min_replicas=args.min_replicas, max_replicas=args.replicas,
-            cooldown_s=args.cooldown_ms * 1e-3), clock=clock)
+            cooldown_s=args.cooldown_ms * 1e-3), clock=clock,
+            health=actuating)
         active = autoscaler.active
     servers = {args.arch: SimServer(
         args.arch, ServiceModel.from_fps(
@@ -130,8 +156,9 @@ def run_sim(args, classes, arrivals):
             slack_ms=args.slack_ms, model=models.get(args.degrade_arch))
     router = OverloadRouter(classes, primary=args.arch,
                             degraded=args.degrade_arch or None,
-                            enabled=not args.no_degrade)
-    sim = TrafficSim(servers, classes, router, clock, autoscaler=autoscaler)
+                            enabled=not args.no_degrade, health=actuating)
+    sim = TrafficSim(servers, classes, router, clock, autoscaler=autoscaler,
+                     health=health)
     return sim.run(arrivals, images=images, labels=labels,
                    accuracy_by_variant=acc)
 
@@ -139,6 +166,7 @@ def run_sim(args, classes, arrivals):
 def run_live(args, classes, arrivals):
     from repro.serve.engine import ShardedResNetEngine
 
+    health = _make_health(args, classes)
     images, labels, acc = _eval_data(args)
     if images is None:
         rng = np.random.default_rng(args.seed)
@@ -157,18 +185,19 @@ def run_live(args, classes, arrivals):
         eng.pool.warmup()
         variants[arch] = eng
     autoscaler = None
+    actuating = health if args.health_actuate else None
     if args.autoscale:
         autoscaler = Autoscaler(AutoscaleConfig(
             min_replicas=args.min_replicas,
             max_replicas=min(args.replicas, n_dev),
             cooldown_s=args.cooldown_ms * 1e-3),
-            clock=variants[args.arch].clock)
+            clock=variants[args.arch].clock, health=actuating)
         variants[args.arch].set_active_replicas(autoscaler.active)
     router = OverloadRouter(classes, primary=args.arch,
                             degraded=args.degrade_arch or None,
-                            enabled=not args.no_degrade)
+                            enabled=not args.no_degrade, health=actuating)
     runner = LiveTrafficRunner(variants, classes, router,
-                               autoscaler=autoscaler)
+                               autoscaler=autoscaler, health=health)
     return runner.run(arrivals, images, labels=labels,
                       accuracy_by_variant=acc)
 
@@ -193,6 +222,10 @@ def print_report(report: dict) -> None:
         for d in a["decisions"]:
             print(f"    t={d['t']:.3f}s {d['from_replicas']}->"
                   f"{d['to_replicas']} ({d['reason']})")
+    if "health" in report:
+        h = report["health"]
+        print(f"  health: {h['ticks']} ticks, {h['alerts']} alerts "
+              f"{h['by_rule']}, {len(h['bundles'])} bundles")
     if "accuracy" in report:
         a = report["accuracy"]
         print(f"  accuracy: effective={a['effective_top1']:.4f} "
@@ -281,6 +314,21 @@ def main(argv=None):
     ap.add_argument("--profile-backend", default="pallas",
                     choices=("pallas", "pallas-stream"),
                     help="kernel pipeline the profiling pass times")
+    # health / alerting (repro.obs.health; observe-only unless
+    # --health-actuate closes the loop)
+    ap.add_argument("--alerts", action="store_true",
+                    help="run the HealthMonitor alert engine (passive: "
+                         "never changes a routing or scaling decision)")
+    ap.add_argument("--bundle-dir", default="",
+                    help="dump debug bundles here on alert / missed-deadline "
+                         "drain (implies --alerts); the alert log is "
+                         "written to <dir>/alerts.jsonl")
+    ap.add_argument("--health-actuate", action="store_true",
+                    help="wire active alerts into the autoscaler and the "
+                         "overload router (implies --alerts); every "
+                         "actuation is recorded with reason='alert:<rule>'")
+    ap.add_argument("--health-interval-ms", type=float, default=20.0,
+                    help="health-rule evaluation cadence (default 20ms)")
     args = ap.parse_args(argv)
     if args.mode_pos:
         args.mode = args.mode_pos
@@ -302,7 +350,8 @@ def main(argv=None):
         print(f"wrote trace to {args.save_trace}")
 
     ob = None
-    if args.trace_out or args.metrics_out or args.jsonl_out:
+    if args.trace_out or args.metrics_out or args.jsonl_out \
+            or args.alerts or args.bundle_dir or args.health_actuate:
         from repro import obs as _o
         ob = _o.instrument()     # run_sim re-binds to its FakeClock
 
@@ -324,6 +373,18 @@ def main(argv=None):
                             metrics_out=args.metrics_out or None,
                             jsonl_out=args.jsonl_out or None)
         _o.disable()
+        if ob.health is not None:
+            from repro.obs import alert_log_path
+            if args.bundle_dir:
+                os.makedirs(args.bundle_dir, exist_ok=True)
+                log = os.path.join(args.bundle_dir, "alerts.jsonl")
+                ob.health.write_alert_log(log)
+                written["alerts"] = log
+            if args.metrics_out:
+                # the alert log always lands next to the metrics file too
+                log = alert_log_path(args.metrics_out)
+                ob.health.write_alert_log(log)
+                written["alerts"] = log
         report["obs"] = dict(trace=ob.trace.summary(),
                              profiles=[p.to_dict() for p in ob.profiles],
                              written=written)

@@ -59,7 +59,7 @@ class ScaleDecision:
     t: float
     from_replicas: int
     to_replicas: int
-    reason: str                   # "queue" | "util-high" | "util-low"
+    reason: str          # "queue" | "util-high" | "util-low" | "alert:<rule>"
     util_ewma: float
     queue_depth: int
 
@@ -74,7 +74,7 @@ class Autoscaler:
     """
 
     def __init__(self, config: Optional[AutoscaleConfig] = None, clock=None,
-                 active: Optional[int] = None):
+                 active: Optional[int] = None, health=None):
         self.config = config or AutoscaleConfig()
         self.clock = clock if clock is not None else S.MonotonicClock()
         self.active = int(active) if active is not None \
@@ -84,6 +84,9 @@ class Autoscaler:
         self.util_ewma = 0.0
         self.decisions: List[ScaleDecision] = []
         self._last_change_t: Optional[float] = None
+        # optional HealthMonitor signal source: an active overload alert
+        # requests a scale-up ahead of the raw queue/util thresholds
+        self.health = health
 
     def observe(self, busy: int, queue_depth: int,
                 slots_per_replica: int = 1) -> int:
@@ -99,7 +102,10 @@ class Autoscaler:
             self.active * max(slots_per_replica, 1), 1)
 
         target, reason = self.active, None
-        if queue_per_slot >= cfg.queue_high:
+        hint = self.health.scale_hint() if self.health is not None else None
+        if hint is not None:
+            target, reason = self.active + 1, "alert:" + hint
+        elif queue_per_slot >= cfg.queue_high:
             target, reason = self.active + 1, "queue"
         elif self.util_ewma > cfg.high_util:
             target, reason = self.active + 1, "util-high"

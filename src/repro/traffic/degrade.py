@@ -64,6 +64,7 @@ class RouteDecision:
     degraded: bool = False
     dropped: bool = False
     overloaded: bool = False      # primary was predicted to miss
+    reason: Optional[str] = None  # "predicted" | "alert:<rule>" | None
 
 
 class OverloadRouter:
@@ -73,14 +74,22 @@ class OverloadRouter:
     ``degraded`` (optional) is the cheaper variant that ``degrade``-policy
     classes fall back to under overload.  ``enabled=False`` turns the
     policy off (every request goes primary) — the A/B arm of the overload
-    experiments."""
+    experiments.
+
+    ``health`` (optional) subscribes the router to a
+    :class:`~repro.obs.health.HealthMonitor`: while an overload-class
+    alert is active, the router degrades *pre-emptively* — before the
+    queue-state prediction alone would — and the decision carries
+    ``reason="alert:<rule>"`` so every actuation is attributable."""
 
     def __init__(self, classes: Iterable[SLOClass], primary: str,
-                 degraded: Optional[str] = None, enabled: bool = True):
+                 degraded: Optional[str] = None, enabled: bool = True,
+                 health=None):
         self.classes = classes_by_name(classes)
         self.primary = primary
         self.degraded = degraded
         self.enabled = enabled
+        self.health = health
 
     def route(self, class_name: str,
               signals: Dict[str, ServerSignals]) -> RouteDecision:
@@ -88,20 +97,43 @@ class OverloadRouter:
         prim = signals[self.primary]
         deadline_s = cls.deadline_ms * 1e-3
         overloaded = prim.predicted_completion_s() > deadline_s
+        reason = "predicted" if overloaded else None
+        if not overloaded and self.enabled and self.health is not None:
+            rule = self.health.overloaded()
+            if rule is not None:
+                overloaded, reason = True, "alert:" + rule
         if not (self.enabled and overloaded) or cls.policy == "strict":
-            return RouteDecision(self.primary, overloaded=overloaded)
+            return RouteDecision(self.primary, overloaded=overloaded,
+                                 reason=reason)
         if cls.policy == "degrade" and self.degraded is not None \
                 and self.degraded in signals:
             # only degrade into a variant that can actually still make the
             # deadline; when even the cheap model is swamped, stay primary
             # (same late answer, better accuracy)
             if signals[self.degraded].predicted_completion_s() <= deadline_s:
+                self._note_actuation("degrade", class_name, reason)
                 return RouteDecision(self.degraded, degraded=True,
-                                     overloaded=True)
-            return RouteDecision(self.primary, overloaded=True)
+                                     overloaded=True, reason=reason)
+            return RouteDecision(self.primary, overloaded=True,
+                                 reason=reason)
         if cls.policy == "drop":
-            return RouteDecision(DROP, dropped=True, overloaded=True)
-        return RouteDecision(self.primary, overloaded=True)
+            self._note_actuation("drop", class_name, reason)
+            return RouteDecision(DROP, dropped=True, overloaded=True,
+                                 reason=reason)
+        return RouteDecision(self.primary, overloaded=True, reason=reason)
+
+    @staticmethod
+    def _note_actuation(kind: str, class_name: str,
+                        reason: Optional[str]) -> None:
+        if not (reason or "").startswith("alert:"):
+            return
+        from repro.obs import runtime as _obs
+        ob = _obs.active()
+        if ob is not None:
+            ob.metrics.counter(
+                "health_actuations_total",
+                "routing actions taken on an active alert").inc(
+                    kind=kind, cls=class_name)
 
 
 # ---------------------------------------------------------------------------

@@ -44,7 +44,7 @@ class LiveTrafficRunner:
     def __init__(self, variants: Dict[str, ShardedResNetEngine], classes,
                  router: OverloadRouter,
                  autoscaler: Optional[Autoscaler] = None,
-                 scale_interval_s: float = 0.02):
+                 scale_interval_s: float = 0.02, health=None):
         if router.primary not in variants:
             raise ValueError(
                 f"router primary {router.primary!r} not in {list(variants)}")
@@ -56,6 +56,10 @@ class LiveTrafficRunner:
         self.clock = variants[router.primary].clock
         self.acct = SLOAccounting(self.classes.values())
         self.tracked: List[_Tracked] = []
+        self.health = health
+        if health is not None:
+            for name, e in variants.items():
+                health.attach_server(name, e.sched)
 
     def _admit(self, a: Arrival, rid: int, images, labels) -> None:
         cls = self.classes[a.slo]
@@ -94,6 +98,7 @@ class LiveTrafficRunner:
         t0 = clock.now()
         i = 0
         next_scale = 0.0
+        next_health = 0.0
         while i < len(arrivals) or \
                 any(e.outstanding or e._in_flight
                     for e in self.variants.values()):
@@ -104,6 +109,9 @@ class LiveTrafficRunner:
             progressed = False
             for e in self.variants.values():
                 progressed |= e.tick()
+            if self.health is not None and now >= next_health:
+                self.health.tick(clock.now())
+                next_health = now + self.health.interval_s
             if self.autoscaler is not None and now >= next_scale:
                 self._autoscale()
                 next_scale = now + self.scale_interval_s
@@ -136,6 +144,8 @@ class LiveTrafficRunner:
                                for n, e in sorted(self.variants.items())})
         if self.autoscaler is not None:
             report["autoscaler"] = self.autoscaler.summary()
+        if self.health is not None:
+            report["health"] = self.health.summary()
         totals = report["totals"]
         if totals["submitted"] and report["duration_s"] > 0:
             totals["fps"] = round(totals["served"] / report["duration_s"], 1)

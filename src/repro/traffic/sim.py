@@ -183,7 +183,7 @@ class TrafficSim:
     def __init__(self, servers: Dict[str, SimServer], classes,
                  router: OverloadRouter, clock: S.FakeClock,
                  autoscaler: Optional[Autoscaler] = None,
-                 scale_interval_s: float = 0.02):
+                 scale_interval_s: float = 0.02, health=None):
         if router.primary not in servers:
             raise ValueError(
                 f"router primary {router.primary!r} not in {list(servers)}")
@@ -195,6 +195,12 @@ class TrafficSim:
         self.scale_interval_s = float(scale_interval_s)
         self.acct = SLOAccounting(self.classes.values())
         self.requests: List[SimRequest] = []
+        # optional HealthMonitor ticked at its own cadence in the event
+        # loop; the monitor samples queue depth from the attached scheds
+        self.health = health
+        if health is not None:
+            for name, s in servers.items():
+                health.attach_server(name, s.sched)
 
     def _admit(self, a: Arrival, rid: int, images, labels) -> None:
         cls = self.classes[a.slo]
@@ -227,6 +233,7 @@ class TrafficSim:
             images = np.asarray(images, np.float32)
         i = 0
         next_scale = self.clock.now()
+        next_health = self.clock.now()
         for step in range(max_steps):
             working = any(s.has_work() for s in self.servers.values())
             if i >= len(arrivals) and not working:
@@ -240,6 +247,8 @@ class TrafficSim:
                     cands.append(e)
             if self.autoscaler is not None and working:
                 cands.append(next_scale)
+            if self.health is not None and working:
+                cands.append(next_health)
             t = max(min(cands), self.clock.now())
             self.clock.advance(t - self.clock.now())
             now = self.clock.now()
@@ -250,6 +259,11 @@ class TrafficSim:
                 i += 1
             for s in self.servers.values():
                 s.start_due(now)
+            if self.health is not None and now >= next_health:
+                # health before autoscale: the tick's alerts are visible to
+                # this round's scale decision, not the next one's
+                self.health.tick(now)
+                next_health = now + self.health.interval_s
             if self.autoscaler is not None and now >= next_scale:
                 prim = self.servers[self.router.primary]
                 self.autoscaler.observe(
@@ -272,6 +286,8 @@ class TrafficSim:
                                for n, s in sorted(self.servers.items())})
         if self.autoscaler is not None:
             report["autoscaler"] = self.autoscaler.summary()
+        if self.health is not None:
+            report["health"] = self.health.summary()
         totals = report["totals"]
         if accuracy_by_variant is not None:
             report["accuracy"] = effective_accuracy(
